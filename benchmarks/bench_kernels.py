@@ -1,0 +1,58 @@
+"""Pallas kernel microbench: wall-clock per call (interpret on CPU) vs oracle.
+
+On-TPU numbers are the real target; interpret-mode wall-clock only checks
+the kernels aren't pathological and tracks relative regressions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    n = 16384
+    ak = jnp.array(np.sort(rng.choice(2**31, n, replace=False)).astype(np.uint32))
+    bk = jnp.array(np.sort(rng.choice(2**31, n, replace=False)).astype(np.uint32))
+    av = jnp.array(np.arange(n, dtype=np.int32))
+    rows.append(dict(name="merge_sorted_16k", us_per_call=_time(ops.merge_sorted, ak, av, bk, av),
+                     ref_us=_time(jax.jit(ref.merge_sorted_ref), ak, av, bk, av)))
+    q = jnp.array(rng.choice(np.asarray(ak), 4096).astype(np.uint32))
+    rows.append(dict(name="sorted_search_16k_q4k",
+                     us_per_call=_time(ops.sorted_search, ak, av, q),
+                     ref_us=_time(jax.jit(ref.sorted_search_ref), ak, av, q)))
+    nbits = -(-n * 10 // (32 * 128)) * 32 * 128
+    words = ops.bloom_build(ak, nbits)
+    rows.append(dict(name="bloom_probe_4k",
+                     us_per_call=_time(lambda w, qq: ops.bloom_probe(w, qq, nbits=nbits), words, q),
+                     ref_us=_time(jax.jit(lambda w, qq: ref.bloom_probe_ref(w, qq, nbits)), words, q)))
+    B, KVH, G, D, S, MP, P = 4, 2, 8, 128, 16, 8, 64
+    qq = jnp.array(rng.normal(size=(B, KVH, G, D)), jnp.float32)
+    kp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.float32)
+    vp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.float32)
+    bt = jnp.array(rng.integers(0, P, (B, MP)), jnp.int32)
+    sl = jnp.full((B,), MP * S, jnp.int32)
+    rows.append(dict(name="paged_attention_b4",
+                     us_per_call=_time(ops.paged_attention, qq, kp, vp, bt, sl),
+                     ref_us=_time(jax.jit(ref.paged_attention_ref), qq, kp, vp, bt, sl)))
+    return rows
+
+
+def check(rows):
+    return [f"{r['name']}: kernel(interp)={r['us_per_call']:.0f}us "
+            f"oracle={r['ref_us']:.0f}us" for r in rows]

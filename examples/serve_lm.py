@@ -1,0 +1,11 @@
+"""Batched serving example: continuous batching over the NB-tree paged KV.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+sys.argv = ["serve", "--arch", "qwen3-8b", "--reduced", "--requests", "6",
+            "--prompt-len", "12", "--max-new", "8", "--max-batch", "3"]
+main()

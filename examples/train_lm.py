@@ -1,0 +1,13 @@
+"""End-to-end LM training example (reduced gemma-2b, NB-tree data ingest).
+
+  PYTHONPATH=src python examples/train_lm.py
+Equivalent CLI: python -m repro.launch.train --arch gemma-2b --reduced ...
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.argv = ["train", "--arch", "gemma-2b", "--reduced", "--steps", "30",
+            "--batch", "4", "--seq", "48", "--ckpt-dir", "runs/example_ckpt",
+            "--ckpt-every", "10"]
+main()

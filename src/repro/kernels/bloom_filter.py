@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: Bloom-filter probe (paper Sec. 5.2, query fast path).
+
+The average-query-time guarantee of the NB-tree rests on Bloom probes being
+nearly free relative to run searches.  On TPU the probe is a handful of VPU
+ops: h rounds of 32-bit multiply-xorshift mixing, one dynamic gather from the
+VMEM-resident bit-array, one bit test — all batched over a query tile.
+
+Filter build (OR-scatter) happens once per flush, off the query critical
+path, and stays in XLA (kernels/ref.py::bloom_build_ref is the production
+build path as well as the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BLOOM_MULTS, KEY_MAX32
+
+LANES = 128
+SUBLANES = 8
+TILE = SUBLANES * LANES
+
+
+def _probe_kernel(words_ref, q_ref, out_ref, *, nbits: int, h: int):
+    words = words_ref[...].reshape(-1)
+    q = q_ref[...]
+    hit = jnp.ones(q.shape, jnp.int32)
+    for r in range(h):
+        x = q.astype(jnp.uint32) * jnp.uint32(BLOOM_MULTS[r])
+        x = x ^ (x >> 15)
+        x = x * jnp.uint32(0x2C1B3C6D)
+        x = x ^ (x >> 12)
+        x = x * jnp.uint32(0x297A2D39)
+        x = x ^ (x >> 15)
+        pos = (x % jnp.uint32(nbits)).astype(jnp.int32)
+        w = jnp.take(words, pos // 32, mode="clip")
+        bit = (w >> (pos % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        hit = hit & bit.astype(jnp.int32)
+    out_ref[...] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("nbits", "h", "interpret"))
+def bloom_probe(words, queries, *, nbits: int, h: int = 3, interpret: bool = True):
+    """Membership mask (int32, 0/1) for ``queries`` against the bit array."""
+    q_raw = queries.shape[0]
+    qn = max(TILE, -(-q_raw // TILE) * TILE)
+    queries = jnp.pad(queries, (0, qn - q_raw), constant_values=KEY_MAX32)
+
+    nw_raw = words.shape[0]
+    nw = max(LANES, -(-nw_raw // LANES) * LANES)
+    words = jnp.pad(words, (0, nw - nw_raw))
+
+    kernel = functools.partial(_probe_kernel, nbits=nbits, h=h)
+    full = pl.BlockSpec((nw // LANES, LANES), lambda t: (0, 0))
+    qspec = pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(qn // TILE,),
+        in_specs=[full, qspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((qn // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(words.reshape(nw // LANES, LANES), queries.reshape(qn // LANES, LANES))
+    return out.reshape(-1)[:q_raw]

@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Single dispatch point: on TPU the kernels compile natively; everywhere else
+they run under ``interpret=True`` (the Pallas interpreter executes the kernel
+body on CPU), so all call sites — the NB-tree device tier, the serving
+engine, tests, benchmarks — use exactly one code path.
+"""
+from __future__ import annotations
+
+import jax
+
+from .bloom_filter import bloom_probe as _bloom_probe
+from .merge_sorted import merge_sorted as _merge_sorted
+from .paged_attention import paged_attention as _paged_attention
+from .ref import bloom_build_ref
+from .sorted_search import sorted_search as _sorted_search
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def merge_sorted(a_keys, a_vals, b_keys, b_vals):
+    return _merge_sorted(a_keys, a_vals, b_keys, b_vals, interpret=_interpret())
+
+
+def sorted_search(run_keys, run_vals, queries):
+    return _sorted_search(run_keys, run_vals, queries, interpret=_interpret())
+
+
+def bloom_probe(words, queries, *, nbits: int, h: int = 3):
+    return _bloom_probe(words, queries, nbits=nbits, h=h, interpret=_interpret())
+
+
+def bloom_build(keys, nbits: int, h: int = 3):
+    """Filter build: once-per-flush XLA path (see bloom_filter.py docstring)."""
+    return bloom_build_ref(keys, nbits, h)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    return _paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                            interpret=_interpret())

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: decode attention over a paged KV cache.
+
+This is where the paper's index meets the model: block tables are produced
+by the NB-tree page index (serve/kv_cache.py) — logical page p of sequence b
+lives at physical page ``block_tables[b, p]``.  The kernel streams those
+pages HBM->VMEM with *scalar prefetch* (the block table rides in SMEM and is
+consumed by the BlockSpec index_map, so the DMA for page p+1 is issued while
+page p is being processed — sequential streaming over a scattered physical
+layout, exactly the paper's seek-free design goal transplanted to HBM).
+
+Flash-decoding style: online softmax over pages with fp32 running (m, l,
+acc) carried in VMEM scratch across grid steps; output written at the last
+page step of each (batch, kv-head).
+
+Shapes (G = query heads per KV head, S = page slots):
+  q             (B, KVH, G, D)
+  k_pages       (KVH, P, S, D)
+  v_pages       (KVH, P, S, D)
+  block_tables  (B, MP) int32
+  seq_lens      (B,)    int32
+  out           (B, KVH, G, D)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(block_tables_ref, seq_lens_ref,   # scalar prefetch
+                       q_ref, k_ref, v_ref,               # VMEM blocks
+                       o_ref,                             # output block
+                       m_ref, l_ref, acc_ref,             # VMEM scratch
+                       *, page_size: int, max_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)           # (S, D)
+    v = v_ref[0, 0].astype(jnp.float32)           # (S, D)
+    d = q.shape[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))                    # (G, S)
+
+    valid = seq_lens_ref[b] - p * page_size
+    slot = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(slot < valid, s, NEG_INF)
+
+    m_prev = m_ref[:, 0:1]                        # (G, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)    # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)               # rescale of old state
+    p_exp = jnp.exp(s - m_new)                    # (G, S)
+    l_new = alpha * l_ref[:, 0:1] + jnp.sum(p_exp, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p_exp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(p == max_pages - 1)
+    def _finish():
+        l = l_ref[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)           # empty sequence guard
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                    interpret: bool = True):
+    """Decode attention; see module docstring for shapes."""
+    B, KVH, G, D = q.shape
+    _, P, S, _ = k_pages.shape
+    MP = block_tables.shape[1]
+
+    g_pad = max(8, -(-G // 8) * 8)
+    if g_pad != G:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - G), (0, 0)))
+
+    grid = (B, KVH, MP)
+    kernel = functools.partial(_paged_attn_kernel, page_size=S, max_pages=MP)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g_pad, D), lambda b, h, p, bt, sl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, S, D), lambda b, h, p, bt, sl: (h, bt[b, p], 0, 0)),
+                pl.BlockSpec((1, 1, S, D), lambda b, h, p, bt, sl: (h, bt[b, p], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g_pad, D), lambda b, h, p, bt, sl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g_pad, 128), jnp.float32),   # m
+                pltpu.VMEM((g_pad, 128), jnp.float32),   # l
+                pltpu.VMEM((g_pad, D), jnp.float32),     # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, g_pad, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pages, v_pages)
+    return out[:, :, :G]

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here defines the *semantics*; the Pallas kernels must match it
+bit-for-bit (integer ops) or to numerical tolerance (attention).  Tests sweep
+shapes/dtypes and assert allclose kernel-vs-oracle (interpret=True on CPU).
+
+Device-tier conventions (DESIGN.md §2): keys are uint32 (TPU-native lane
+width), ``KEY_MAX`` = 0xFFFFFFFF is the padding sentinel and sorts last,
+values are int32 payload references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KEY_MAX32 = jnp.uint32(0xFFFFFFFF)
+
+# Murmur3/xxhash-style 32-bit mixing constants for Bloom hashing.
+BLOOM_MULTS = (0x85EBCA6B, 0xC2B2AE35, 0x9E3779B1, 0x27D4EB2F, 0x165667B1, 0xD3A2646C)
+
+
+def merge_sorted_ref(a_keys, a_vals, b_keys, b_vals):
+    """Merge two sorted runs; equal keys keep the ``a`` copy *first*.
+
+    ``a`` is the newer stream (flushed from the parent d-tree), so a query
+    that takes the leftmost match sees the freshest record — the delta-record
+    resolution rule of paper Sec. 3.2.2.  Output length = len(a)+len(b);
+    KEY_MAX padding naturally sorts to the tail.
+    """
+    keys = jnp.concatenate([a_keys, b_keys])
+    vals = jnp.concatenate([a_vals, b_vals])
+    # stable ascending sort; 'a' entries precede 'b' entries on equal keys
+    # because they come first in the concatenation.
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def sorted_search_ref(run_keys, run_vals, queries):
+    """Batched B+-tree-leaf search of ``queries`` in one sorted run.
+
+    Returns (found: bool (Q,), vals: int32 (Q,), idx: int32 (Q,)) where idx is
+    the *leftmost* position with run_keys[idx] == q (the freshest copy under
+    duplicate-keeping merges).  Padding keys KEY_MAX never match.
+    """
+    idx = jnp.searchsorted(run_keys, queries, side="left").astype(jnp.int32)
+    n = run_keys.shape[0]
+    safe = jnp.minimum(idx, n - 1)
+    hit_key = run_keys[safe]
+    found = (idx < n) & (hit_key == queries) & (queries != KEY_MAX32)
+    vals = jnp.where(found, run_vals[safe], jnp.int32(-1))
+    return found, vals, idx
+
+
+def bloom_hash_ref(keys, h: int, nbits: int):
+    """(h, N) bit positions via 32-bit multiply-xorshift mixing."""
+    x = keys.astype(jnp.uint32)[None, :]
+    m = jnp.asarray(BLOOM_MULTS[:h], jnp.uint32)[:, None]
+    x = x * m
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x2C1B3C6D)
+    x = x ^ (x >> 12)
+    x = x * jnp.uint32(0x297A2D39)
+    x = x ^ (x >> 15)
+    return (x % jnp.uint32(nbits)).astype(jnp.int32)
+
+
+def bloom_build_ref(keys, nbits: int, h: int = 3):
+    """Bloom bit array as (nbits//32,) uint32 words.
+
+    OR-scatter realized as 32 per-bit-plane max-scatters (each plane is 0/1,
+    where max == OR); XLA fuses these well and build runs once per flush,
+    off the query critical path.
+    """
+    assert nbits % 32 == 0
+    pos = bloom_hash_ref(keys, h, nbits).reshape(-1)      # h-major (h*N,)
+    valid = jnp.tile(keys != KEY_MAX32, (h,))
+    word = pos // 32
+    bitpos = pos % 32
+    nwords = nbits // 32
+    words = jnp.zeros(nwords, jnp.uint32)
+    for b in range(32):
+        sel = (valid & (bitpos == b)).astype(jnp.uint32)
+        plane = jnp.zeros(nwords, jnp.uint32).at[word].max(sel)
+        words = words | (plane << b)
+    return words
+
+
+def bloom_probe_ref(words, queries, nbits: int, h: int = 3):
+    """Membership probe → bool (Q,).  No false negatives by construction."""
+    pos = bloom_hash_ref(queries, h, nbits)  # (h, Q)
+    w = words[pos // 32]
+    bit = (w >> (pos % 32).astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.all(bit == 1, axis=0)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens):
+    """Decode-step attention over a paged KV cache (fp32 accumulation).
+
+    q:            (B, KVH, G, D)   one new query token per sequence
+    k_pages:      (KVH, P, S, D)   P physical pages of S slots
+    v_pages:      (KVH, P, S, D)
+    block_tables: (B, MP) int32    logical page p of seq b -> physical page
+    seq_lens:     (B,) int32       valid tokens per sequence
+    returns:      (B, KVH, G, D)
+    """
+    B, KVH, G, D = q.shape
+    _, P, S, _ = k_pages.shape
+    MP = block_tables.shape[1]
+
+    def per_seq(qb, bt, ln):
+        # gather this sequence's pages: (KVH, MP*S, D)
+        k = k_pages[:, bt].reshape(KVH, MP * S, D)
+        v = v_pages[:, bt].reshape(KVH, MP * S, D)
+        scores = jnp.einsum("hgd,htd->hgt", qb.astype(jnp.float32), k.astype(jnp.float32))
+        scores = scores / jnp.sqrt(jnp.float32(D))
+        mask = jnp.arange(MP * S) < ln
+        scores = jnp.where(mask[None, None, :], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("hgt,htd->hgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+    return jax.vmap(per_seq)(q, block_tables, seq_lens)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: batched binary search in a sorted run (query hot loop).
+
+TPU adaptation of the d-tree B+-tree search (paper Sec. 3.2.3): the internal
+d-nodes of a disk B+-tree degenerate, in VMEM, to a vectorized binary search
+over the contiguous sorted run — identical asymptotics (log_B sigma), zero
+pointer chasing, and every query in the batch proceeds in lockstep (the
+searches share the fori step counter, so the kernel has no data-dependent
+control flow).
+
+Grid is over query tiles; the run (keys + values) is fully VMEM-resident and
+reused across all grid steps (Pallas keeps the block pinned since its index
+map is constant).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KEY_MAX32
+
+LANES = 128
+SUBLANES = 8
+TILE = SUBLANES * LANES
+
+
+def _take(arr, idx):
+    return jnp.take(arr, idx, mode="clip")
+
+
+def _search_kernel(run_keys_ref, run_vals_ref, q_ref, found_ref, val_ref, idx_ref,
+                   *, n: int, steps: int):
+    run = run_keys_ref[...].reshape(-1)
+    vals = run_vals_ref[...].reshape(-1)
+    q = q_ref[...]
+
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, n, jnp.int32)
+    for _ in range(steps):
+        i = (lo + hi) >> 1
+        probe = _take(run, jnp.clip(i, 0, n - 1))
+        go_right = (lo < hi) & (probe < q)
+        lo = jnp.where(go_right, i + 1, lo)
+        hi = jnp.where(go_right, hi, i)
+
+    hit = _take(run, jnp.clip(lo, 0, n - 1))
+    # NB: the sentinel is materialized *inside* the kernel — pallas kernels
+    # may not capture module-level traced constants.
+    found = (lo < n) & (hit == q) & (q != jnp.uint32(0xFFFFFFFF))
+    found_ref[...] = found.astype(jnp.int32)
+    val_ref[...] = jnp.where(found, _take(vals, jnp.clip(lo, 0, n - 1)), -1)
+    idx_ref[...] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sorted_search(run_keys, run_vals, queries, *, interpret: bool = True):
+    """Leftmost-match search of ``queries`` in one sorted run.
+
+    Returns (found int32 (Q,), vals int32 (Q,), idx int32 (Q,)), Q padded to
+    a TILE multiple internally and sliced back.
+    """
+    q_raw = queries.shape[0]
+    qn = max(TILE, -(-q_raw // TILE) * TILE)
+    queries = jnp.pad(queries, (0, qn - q_raw), constant_values=KEY_MAX32)
+
+    n_raw = run_keys.shape[0]
+    n = max(LANES, -(-n_raw // LANES) * LANES)
+    run_keys = jnp.pad(run_keys, (0, n - n_raw), constant_values=KEY_MAX32)
+    run_vals = jnp.pad(run_vals, (0, n - n_raw), constant_values=0)
+
+    steps = math.ceil(math.log2(n + 1)) + 1
+    kernel = functools.partial(_search_kernel, n=n, steps=steps)
+
+    run2 = run_keys.reshape(n // LANES, LANES)
+    vals2 = run_vals.reshape(n // LANES, LANES)
+    q2 = queries.reshape(qn // LANES, LANES)
+
+    full = pl.BlockSpec((n // LANES, LANES), lambda t: (0, 0))
+    qspec = pl.BlockSpec((SUBLANES, LANES), lambda t: (t, 0))
+    found, vals, idx = pl.pallas_call(
+        kernel,
+        grid=(qn // TILE,),
+        in_specs=[full, full, qspec],
+        out_specs=[qspec, qspec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((qn // LANES, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((qn // LANES, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(run2, vals2, q2)
+    return (
+        found.reshape(-1)[:q_raw],
+        vals.reshape(-1)[:q_raw],
+        idx.reshape(-1)[:q_raw],
+    )

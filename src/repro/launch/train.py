@@ -1,0 +1,65 @@
+"""End-to-end training driver.
+
+CPU-scale example (reduced config, real pipeline):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir runs/train_gemma
+
+Production shape (the dry-run validates this path on the 16x16/2x16x16
+meshes; on real hardware drop --reduced and pass --mesh single|multi).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from ..data.pipeline import PackedBatches, StreamingIngest, synthetic_documents
+from ..models import registry
+from ..optim import adamw
+from ..optim.schedules import cosine_with_warmup
+from ..train.trainer import Trainer
+from .mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.encoder_only:
+        raise SystemExit("use a decoder arch for the LM training example")
+
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+    ingest = StreamingIngest()
+    for doc in synthetic_documents(512, args.seq + 8, cfg.vocab):
+        ingest.ingest(doc)
+    print(f"ingested {len(ingest)} docs (NB-tree indexed, {ingest.dups} dups dropped)")
+    batches = PackedBatches(ingest, args.batch, args.seq)
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=cosine_with_warmup(args.lr, args.steps // 10 + 1, args.steps))
+    tr = Trainer(cfg, mesh=mesh, opt_cfg=opt_cfg, ckpt_dir=args.ckpt_dir,
+                 num_microbatches=args.microbatches,
+                 grad_compression=args.grad_compression)
+    hist = tr.run(batches, args.steps, ckpt_every=args.ckpt_every)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(first {hist[0]['loss']:.4f}) over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

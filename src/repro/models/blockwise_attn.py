@@ -1,0 +1,159 @@
+"""Blockwise (flash-style) attention in pure XLA — the memory-term fix.
+
+Naive SDPA materializes (B, H, S, T) fp32 scores; at 32k context that is
+tens-to-hundreds of GiB per device (the dominant memory term of every
+train/prefill baseline cell — EXPERIMENTS.md §Perf).  This implements the
+FlashAttention recurrence: an outer ``lax.map`` over query chunks and an
+inner ``lax.scan`` over KV chunks with online softmax (running m, l, acc),
+the chunk body rematerialized (jax.checkpoint) so backward recomputes chunk
+scores instead of saving them.  Peak attention footprint per layer drops
+from O(S*T) to O(q_chunk * kv_chunk) — 67 MB instead of 137 GB for the
+qwen3 train_4k backward, 86 s -> sub-second memory term for hymba prefill.
+
+Pure-XLA rather than Pallas so it differentiates for training out of the
+box; the Pallas decode path (kernels/paged_attention.py) covers the serving
+hot loop.  Masks (causal / sliding-window / bidir / cache-position) are
+computed analytically per chunk pair from positions — never materialized at
+(S, T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def blockwise_sdpa(q, k, v, *, qpos, kpos, kind: str = "causal",
+                   window: int | None = None, q_chunk: int = 512,
+                   kv_chunk: int = 1024, kv_scales=None):
+    """q (B,S,H,D), k/v (B,T,KVH,D), qpos (B,S), kpos (B,T) -> (B,S,H,D).
+
+    kpos < 0 marks invalid (unwritten cache) slots.  Semantics identical to
+    the naive softmax attention + position masks; tested for parity.
+    ``kv_scales`` = (k_scale, v_scale) (B,T,KVH) enables int8 K/V: chunks are
+    dequantized in-register per tile (HBM reads stay int8 — the 2x decode
+    bandwidth win of EXPERIMENTS.md §Perf It.7).
+    """
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    Dv = v.shape[3]              # may differ from D (MLA: qk 96, v 64)
+    out_dtype = v.dtype if kv_scales is None else q.dtype
+    # never pad queries past the actual sequence (decode: S=1 -> qc=8).
+    q_chunk = min(q_chunk, max(8, -(-S // 8) * 8))
+
+    q5 = q.reshape(B, S, KVH, G, D).astype(jnp.float32) / np.sqrt(D)
+    q5, S0 = _pad_to(q5, 1, q_chunk)
+    qpos_p, _ = _pad_to(qpos, 1, q_chunk)
+    Sp = q5.shape[1]
+    nq = Sp // q_chunk
+
+    k, T0 = _pad_to(k, 1, kv_chunk)
+    v, _ = _pad_to(v, 1, kv_chunk)
+    kpos, _ = _pad_to(kpos, 1, kv_chunk)
+    T = k.shape[1]
+    kpos = jnp.where(jnp.arange(T)[None, :] >= T0, -1, kpos)
+    nc = T // kv_chunk
+
+    kc = k.reshape(B, nc, kv_chunk, KVH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, kv_chunk, KVH, Dv).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(B, nc, kv_chunk).transpose(1, 0, 2)
+    if kv_scales is not None:
+        ks_, vs_ = kv_scales
+        ks_, _ = _pad_to(ks_, 1, kv_chunk)
+        vs_, _ = _pad_to(vs_, 1, kv_chunk)
+        ksc = ks_.reshape(B, nc, kv_chunk, KVH).transpose(1, 0, 2, 3)
+        vsc = vs_.reshape(B, nc, kv_chunk, KVH).transpose(1, 0, 2, 3)
+    else:  # unit scales keep one code path
+        ksc = vsc = jnp.ones((nc, 1, 1, 1), jnp.float32)
+
+    qs = q5.reshape(B, nq, q_chunk, KVH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp = qpos_p.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+
+    def per_q_chunk(args):
+        qi, qpi = args                            # (B,qc,KVH,G,D), (B,qc)
+
+        def chunk_body(carry, xs):
+            m, l, acc = carry
+            kc_i, vc_i, pc_i, ks_i, vs_i = xs     # (B,c,KVH,D), (B,c), (B,c,KVH)
+            kf = kc_i.astype(jnp.float32) * ks_i[..., None]  # in-register dequant
+            vf = vc_i.astype(jnp.float32) * vs_i[..., None]
+            s = jnp.einsum("bskgd,bckd->bkgsc", qi, kf)
+            valid = pc_i[:, None, None, None, :] >= 0
+            if kind == "causal":
+                valid = valid & (pc_i[:, None, None, None, :]
+                                 <= qpi[:, None, None, :, None])
+                if window is not None:
+                    valid = valid & (pc_i[:, None, None, None, :]
+                                     > qpi[:, None, None, :, None] - window)
+            s = jnp.where(valid, s, NEG_INF)
+            m_c = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, m_c)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, -1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgsc,bckd->bkgsd", p, vf)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, Dv), jnp.float32)
+        # remat: backward recomputes chunk scores, never saves (..., s, c).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(chunk_body),
+                                      (m0, l0, a0), (kc, vc, pc, ksc, vsc))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l[..., None]).astype(out_dtype)  # (B,KVH,G,qc,D)
+
+    outs = jax.lax.map(per_q_chunk, (qs, qp))     # (nq,B,KVH,G,qc,Dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sp, KVH, G, Dv)
+    return out[:, :S0].reshape(B, S0, H, Dv)
+
+
+#: score-tensor element threshold above which attention goes blockwise.
+BLOCKWISE_THRESHOLD = 32 * 1024 * 1024
+
+
+def should_use_blockwise(B, S, T, H) -> bool:
+    return B * S * T * H > BLOCKWISE_THRESHOLD
+
+
+def tile_schedule(S: int, T: int, q_chunk: int = 512, kv_chunk: int = 1024):
+    """(nq, nc, qc, kc) the kernel will actually run — for the roofline's
+    analytic supplement (XLA cost analysis counts loop bodies once)."""
+    qc = min(q_chunk, max(8, -(-S // 8) * 8))
+    Sp = -(-S // qc) * qc
+    Tp = -(-T // kv_chunk) * kv_chunk
+    return Sp // qc, Tp // kv_chunk, qc, kv_chunk
+
+
+def analytic_costs(B, S, T, H, D, KVH, kind="train", dtype_bytes=2):
+    """Per-layer attention (flops, hbm_bytes) the blockwise kernel implies.
+
+    flops: 4*B*qc*kc*H*D per tile (QK^T + PV), all nq*nc tiles computed
+    (masked tiles still run — data-independent schedule).  Backward of a
+    rematerialized flash layer recomputes forward and differentiates:
+    ~3.5x forward flops for training.
+    hbm  : K and V chunks re-stream once per q-chunk pass (the flash
+    traffic model: (nq) * T * KVH * D * 2), plus Q/out once.
+    """
+    nq, nc, qc, kc = tile_schedule(S, T)
+    fwd = 4.0 * B * (nq * qc) * (nc * kc) * H * D
+    flops = fwd * (3.5 if kind == "train" else 1.0)
+    hbm = (nq * (nc * kc) * KVH * D * 2 * dtype_bytes * B
+           + 2 * B * S * H * D * dtype_bytes)
+    hbm = hbm * (3.0 if kind == "train" else 1.0)
+    return flops, hbm
+

@@ -1,0 +1,232 @@
+"""Shared transformer layers: norms, RoPE/M-RoPE, GQA/MQA/SWA attention, MLPs.
+
+Conventions (MaxText-style):
+  * parameters are plain pytrees (dicts of jnp arrays), bf16 by default;
+  * all softmax / norm statistics accumulate in fp32;
+  * attention is einsum-based so GSPMD can shard heads over the "model"
+    mesh axis without reshapes crossing sharding boundaries;
+  * decode uses a contiguous KV cache (B, S_max, KVH, D) updated with
+    dynamic_update_slice; the serving engine swaps in the paged-attention
+    Pallas kernel + NB-tree block tables (serve/kv_cache.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blockwise_attn import blockwise_sdpa, should_use_blockwise
+
+# --------------------------------------------------------------------- init
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale + bias
+
+
+def norm_params(key, d, kind, dtype):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(x, p, kind, eps):
+    if kind == "rms":
+        return rms_norm(x, p["scale"], eps)
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_angles(positions, dim, base):
+    """positions (..., S) -> cos/sin (..., S, dim//2), fp32."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, D) with cos/sin (B, S, D//2) [or broadcastable]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def mrope_angles(positions, dim, base, sections):
+    """M-RoPE (Qwen2-VL): rotary dims partitioned into (t, h, w) sections.
+
+    positions: (3, B, S) — temporal/height/width position ids.  For pure
+    text the three rows are identical and M-RoPE reduces to RoPE exactly.
+    """
+    half = dim // 2
+    assert sum(sections) == half, (sections, dim)
+    cos_all, sin_all = rope_angles(positions, dim, base)   # (3, B, S, half)
+    chunks_c, chunks_s = [], []
+    start = 0
+    for i, sec in enumerate(sections):
+        chunks_c.append(cos_all[i, ..., start:start + sec])
+        chunks_s.append(sin_all[i, ..., start:start + sec])
+        start += sec
+    return jnp.concatenate(chunks_c, -1), jnp.concatenate(chunks_s, -1)
+
+
+# ---------------------------------------------------------------- attention
+def attn_params(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": _dense_init(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": _dense_init(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": _dense_init(ko, (cfg.n_heads * hd, d), dtype, fan_in=cfg.n_heads * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _quantize_kv(t):
+    """(B,S,KVH,D) -> int8 weights + (B,S,KVH) fp32 symmetric scales."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    w = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return w, scale
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,H,D), k/v (B,T,KVH,D) -> (B,S,H,D); fp32 softmax; GQA grouping."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    q = q.reshape(B, S, KVH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(v.dtype)
+
+
+def causal_mask(S, T=None, window=None, offset=0):
+    """(S, T) bool; True = attend.  offset = query-position of row 0."""
+    T = T or S
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def attention(x, p, cfg, *, positions, kind="causal", window=None,
+              cache=None, cache_index=None, true_index=None,
+              mrope_positions=None):
+    """Full-sequence or single-step (cache) attention.
+
+    kind: "causal" | "bidir"; window enables SWA.  If ``cache`` is given, x
+    is (B, 1, d), cache = dict(k, v, pos) of (B, kv_len, ...) — a *ring*
+    when kv_len < context (SWA long-context decode): the new KV lands at
+    slot ``cache_index`` (= true_index % kv_len) and masking uses the
+    stored true positions, so rolled-over slots are handled exactly.
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if cfg.mrope_sections is not None:
+        pos3 = mrope_positions
+        if pos3 is None:
+            pos3 = jnp.broadcast_to(positions, (3,) + positions.shape)
+        cos, sin = mrope_angles(pos3, hd, cfg.rope_base, cfg.mrope_sections)
+    else:
+        cos, sin = rope_angles(positions, hd, cfg.rope_base)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        if should_use_blockwise(B, S, S, cfg.n_heads):
+            # flash-style blockwise path: O(chunk^2) attention memory.
+            out = blockwise_sdpa(q, k, v, qpos=positions,
+                                 kpos=positions, kind=kind, window=window)
+        else:
+            mask = causal_mask(S, window=window) if kind == "causal" else jnp.ones((S, S), bool)
+            out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, S, S)))
+        new_cache = {"k": k, "v": v}  # raw per-position KV for prefill cache
+    else:
+        tidx = true_index if true_index is not None else cache_index
+        quant = cache["k"].dtype == jnp.int8
+        if quant:
+            # int8 KV: per (token, kv-head) symmetric scales.  Halves the
+            # decode-dominant cache-read bytes (EXPERIMENTS.md §Perf It.7).
+            k_w, k_s = _quantize_kv(k)
+            v_w, v_s = _quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], k_w, (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v_w, (0, cache_index, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_s, (0, cache_index, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_s, (0, cache_index, 0))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_index, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((B, 1), tidx, jnp.int32), (0, cache_index))
+        T = ck.shape[1]
+        if should_use_blockwise(B, 1, T, cfg.n_heads):
+            # decode masking == causal-vs-stored-positions (+ window)
+            qpos = jnp.broadcast_to(jnp.asarray(tidx, jnp.int32), (B, 1))
+            scales = (cks, cvs) if quant else None
+            out = blockwise_sdpa(q, ck, cv, qpos=qpos, kpos=cpos,
+                                 kind="causal", window=window,
+                                 kv_scales=scales)
+        else:
+            m = (cpos <= tidx) & (cpos >= 0)
+            if window is not None:
+                m = m & (cpos > tidx - window)
+            dk, dv = (ck, cv) if not quant else (
+                ck.astype(jnp.float32) * cks[..., None],
+                cv.astype(jnp.float32) * cvs[..., None])
+            out = _sdpa(q, dk, dv, m[:, None, :]).astype(x.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if quant:
+            new_cache.update(k_scale=cks, v_scale=cvs)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp_params(key, d, d_ff, kind, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": _dense_init(k1, (d, d_ff), dtype),
+                "wg": _dense_init(k2, (d, d_ff), dtype),
+                "wo": _dense_init(k3, (d_ff, d), dtype, fan_in=d_ff)}
+    return {"wi": _dense_init(k1, (d, d_ff), dtype),
+            "wo": _dense_init(k3, (d_ff, d), dtype, fan_in=d_ff)}
+
+
+def mlp(x, p, kind):
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

@@ -1,0 +1,101 @@
+"""Multi-head Latent Attention (MiniCPM3-4B / DeepSeek-V2 family).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a small latent c_kv (kv_lora_rank) plus a shared rotary key
+slice — the decode cache stores only (c_kv, k_rope), the architecture's
+whole point: cache bytes per token = kv_lora_rank + qk_rope_head_dim
+instead of 2 * H * head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blockwise_attn import blockwise_sdpa, should_use_blockwise
+from .layers import _dense_init, apply_rope, rms_norm, rope_angles
+
+
+def mla_params(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_down": _dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_up": _dense_init(ks[1], (m.q_lora_rank, H * qk_dim), dtype,
+                             fan_in=m.q_lora_rank),
+        "wkv_down": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_up": _dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype,
+                             fan_in=m.kv_lora_rank),
+        "wv_up": _dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim), dtype,
+                             fan_in=m.kv_lora_rank),
+        "wo": _dense_init(ks[5], (H * m.v_head_dim, d), dtype, fan_in=H * m.v_head_dim),
+    }
+
+
+def mla_attention(x, p, cfg, *, positions, cache=None, cache_index=None):
+    """Returns (out, new_cache); cache = dict(c_kv (B,S,R), k_rope (B,S,Dr))."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    q = rms_norm(x @ p["wq_down"], p["q_norm"], cfg.norm_eps) @ p["wq_up"]
+    q = q.reshape(B, S, H, qk_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+    kv = x @ p["wkv_down"]                              # (B, S, R + Dr)
+    c_kv = rms_norm(kv[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope_new = kv[..., m.kv_lora_rank:][:, :, None, :]  # (B, S, 1, Dr)
+
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_base)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_new = apply_rope(k_rope_new, cos, sin)[:, :, 0]  # (B, S, Dr)
+
+    if cache is None:
+        # ---- full-sequence (train/prefill): materialize per-layer K/V and
+        # run the flash blockwise path when large (PERF It.8) ------------
+        k_nope = (c_kv @ p["wk_up"]).reshape(B, S, H, m.qk_nope_head_dim)
+        v = (c_kv @ p["wv_up"]).reshape(B, S, H, m.v_head_dim)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_new[:, :, None, :],
+                                      (B, S, H, m.qk_rope_head_dim))], -1)
+        q_cat = jnp.concatenate([q_nope, q_rope], -1)    # (B,S,H,qk_dim)
+        if should_use_blockwise(B, S, S, H):
+            out = blockwise_sdpa(q_cat, k_cat, v, qpos=positions,
+                                 kpos=positions, kind="causal")
+        else:
+            sc = jnp.einsum("bshd,bthd->bhst", q_cat.astype(jnp.float32),
+                            k_cat.astype(jnp.float32)) / np.sqrt(qk_dim)
+            mask = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+            sc = jnp.where(mask[None, None], sc, -1e30)
+            w = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+        out = out.reshape(B, S, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
+        # raw per-position latents for prefill caching.
+        return out, {"c_kv": c_kv, "k_rope": k_rope_new}
+
+    # ---- decode: *absorbed* attention (PERF It.8) ------------------------
+    # score = q_nope . (c_kv W_uk)^T == (q_nope W_uk^T) . c_kv, so the step
+    # reads only the latent cache (R + Dr floats per token) — the
+    # architecture's whole point; never materializes (B,T,H,D) keys.
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, cache_index, 0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, cache_index, 0))
+    T = ck.shape[1]
+    wk = p["wk_up"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))            # (B,1,H,R)
+    sc = (jnp.einsum("bshr,btr->bhst", q_abs, ck.astype(jnp.float32))
+          + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                       kr.astype(jnp.float32))) / np.sqrt(qk_dim)
+    mask = (jnp.arange(T) <= cache_index)[None, None, None, :]
+    sc = jnp.where(mask, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", w, ck.astype(jnp.float32))  # (B,1,H,R)
+    wv = p["wv_up"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", ctx, wv.astype(jnp.float32))
+    out = out.reshape(B, S, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"c_kv": ck, "k_rope": kr}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts MLP with capacity-based sort dispatch.
+
+Mixtral-style (few large experts) and DeepSeek-MoE-style (fine-grained
+routed experts + always-on shared experts) are both expressed here.
+
+Dispatch is the static-shape *capacity* formulation: token->expert
+assignments are grouped by a stable sort on expert id, truncated to
+``capacity = ceil(tokens * top_k / E * capacity_factor)`` per expert
+(overflow tokens drop, standard at scale), and the grouped activations hit
+the expert weights as one batched einsum ``ecd,edf->ecf`` — so compiled
+FLOPs are tokens x top_k x expert-FFN (the MoE roofline is honest, no
+dense-all-experts shortcut).
+
+Sharding: expert-major weights (E, d, d_ff) shard E over the "model" axis
+(EP); grouped activations (E, C, d) shard the same way, and GSPMD inserts
+the token all-to-all at the gather/scatter boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .layers import _dense_init
+
+
+def moe_params(key, cfg, dtype):
+    d = cfg.d_model
+    dff = cfg.d_expert or cfg.d_ff
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(kr, (d, cfg.n_experts), jnp.float32),
+        "wi": _dense_init(k1, (cfg.n_experts, d, dff), dtype),
+        "wg": _dense_init(k2, (cfg.n_experts, d, dff), dtype),
+        "wo": _dense_init(k3, (cfg.n_experts, dff, d), dtype, fan_in=dff),
+    }
+    if cfg.n_shared_experts:
+        dsh = dff * cfg.n_shared_experts
+        ka, kb, kc = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wi": _dense_init(ka, (d, dsh), dtype),
+            "wg": _dense_init(kb, (d, dsh), dtype),
+            "wo": _dense_init(kc, (dsh, d), dtype, fan_in=dsh),
+        }
+    return p
+
+
+def _dp_groups() -> int:
+    """Number of data-parallel shards (dispatch groups) on the active mesh."""
+    from ..distributed.sharding import mesh_axis_size
+    return max(1, mesh_axis_size("data") * mesh_axis_size("pod"))
+
+
+def moe_mlp(x, p, cfg):
+    """x (B, S, d) -> (B, S, d); top-k routing with *grouped* capacity dispatch.
+
+    Tokens are reshaped to (G, N_loc, d) with G = data-parallel shard count,
+    and the whole sort/grid/scatter pipeline is batched over G.  With G
+    sharded over ("pod","data"), every grouping op is device-local under
+    GSPMD (batched gathers/scatters with a sharded batch dim insert no
+    collectives), dispatch tensors shrink from (E, N*K/E, d) *global* to
+    (G, E, N_loc*K/E, d) *local*, and the only cross-device traffic left is
+    the EP/TP partial-sum all-reduce over "model" of the local expert
+    outputs — the 423 s -> ~10 s mixtral collective fix of EXPERIMENTS.md
+    §Perf iteration 4.
+    """
+    B, S, d = x.shape
+    N = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    G = _dp_groups()
+    if N % G != 0 or (N // G) * cfg.capacity_factor < E:
+        G = 1
+    NL = N // G                                              # tokens per group
+    xf = x.reshape(G, NL, d)
+    xf = constrain(xf, "batch", None, None)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (G, NL, E)
+    gate, eidx = jax.lax.top_k(logits, K)                    # (G, NL, K)
+    gate = jax.nn.softmax(gate, axis=-1)                     # renorm over top-k
+
+    # ---- group (token, k) slots by expert, per data shard ------------------
+    flat_e = eidx.reshape(G, NL * K)
+    order = jnp.argsort(flat_e, axis=1, stable=True)         # token order kept
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    cap = int(max(1, round(NL * K / E * cfg.capacity_factor)))
+    first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(sorted_e)
+    within = jnp.arange(NL * K)[None, :] - first             # rank in group
+    keep = within < cap
+    dest = sorted_e * cap + jnp.clip(within, 0, cap - 1)
+    slot_token = order // K                                  # (G, NL*K)
+
+    grid_token = jnp.full((G, E * cap), NL, jnp.int32)       # NL = padding row
+    # dropped slots scatter out-of-bounds and are discarded by mode="drop".
+    grid_token = jax.vmap(
+        lambda gt, dst, st: gt.at[dst].set(st, mode="drop"))(
+        grid_token, jnp.where(keep, dest, E * cap), slot_token.astype(jnp.int32))
+    xpad = jnp.concatenate([xf, jnp.zeros((G, 1, d), xf.dtype)], axis=1)
+    xg = jnp.take_along_axis(
+        xpad, grid_token[..., None], axis=1).reshape(G, E, cap, d)
+    xg = constrain(xg, "batch", "experts", None, None)
+
+    # ---- expert FFN (EP shards E over "model" when divisible; otherwise
+    # the wi/wo fallback rule shards the FFN hidden dim, DESIGN.md §5) -----
+    h = jnp.einsum("gecd,edf->gecf", xg, p["wi"])
+    g = jnp.einsum("gecd,edf->gecf", xg, p["wg"])
+    yg = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * h, p["wo"])
+    yg = constrain(yg, "batch", "experts", None, None).astype(x.dtype)
+    yg = yg.reshape(G, E * cap, d)
+
+    # ---- combine back with gate weights, per group --------------------------
+    slot_gate = jnp.take_along_axis(gate.reshape(G, NL * K), order, axis=1)
+    contrib = jnp.where(keep, slot_gate, 0.0)
+
+    def combine(yg_g, dest_g, keep_g, tok_g, w_g):
+        y = jnp.zeros((NL + 1, d), jnp.float32)
+        vals = yg_g[jnp.where(keep_g, dest_g, 0)].astype(jnp.float32)
+        return y.at[jnp.where(keep_g, tok_g, NL)].add(vals * w_g[:, None])
+
+    y = jax.vmap(combine)(yg, dest, keep, slot_token, contrib)
+    out = y[:, :NL].astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xf @ sp["wg"]) * (xf @ sp["wi"])) @ sp["wo"]
+    return out.reshape(B, S, d)
+
+
+def aux_load_balance_loss(x, p, cfg):
+    """Switch-style load-balancing auxiliary loss (returned by train_step)."""
+    N = x.shape[0] * x.shape[1]
+    logits = (x.reshape(N, -1).astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    _, eidx = jax.lax.top_k(logits, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(eidx, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * jnp.mean(probs, 0))

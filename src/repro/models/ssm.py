@@ -1,0 +1,196 @@
+"""Recurrent blocks: xLSTM (mLSTM, sLSTM) and a Mamba-style selective SSM.
+
+All three are implemented in their *recurrent* form with ``lax.scan`` over
+time — shape-faithful to the published configs, compact HLO for 512-way
+SPMD compiles, and O(1)-state decode for the long_500k shape (the whole
+point of assigning these archs the long-context cells).  The chunkwise-
+parallel training formulation is a recorded hillclimb candidate
+(EXPERIMENTS.md §Perf).
+
+State conventions (decode carries these instead of a KV cache):
+  mLSTM : C (B, H, Dk, Dv), n (B, H, Dk), m (B, H)
+  sLSTM : c, n, m, h_prev (B, d) each
+  mamba : s (B, d_inner, N), conv window (B, W, d_inner)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, rms_norm
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dk = d // H
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": _dense_init(ks[0], (d, d), dtype),
+        "wk": _dense_init(ks[1], (d, d), dtype),
+        "wv": _dense_init(ks[2], (d, d), dtype),
+        "wi": _dense_init(ks[3], (d, H), dtype),     # input gate (per head)
+        "wf": _dense_init(ks[4], (d, H), dtype),     # forget gate
+        "wo_gate": _dense_init(ks[5], (d, d), dtype),
+        "wo": _dense_init(ks[6], (d, d), dtype),
+        "out_norm": jnp.ones((d,), dtype),
+    }
+
+
+def _mlstm_step(state, qkvif, dk):
+    """One recurrence step with exponential-gating stabilizer m."""
+    C, n, m = state
+    q, k, v, i_pre, f_pre = qkvif                     # (B,H,Dk) (B,H,Dk) (B,H,Dv) (B,H) (B,H)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, i_pre.astype(jnp.float32))
+    i_g = jnp.exp(i_pre.astype(jnp.float32) - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32) / np.sqrt(dk)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_block(x, p, cfg, state=None):
+    """x (B, S, d) -> (B, S, d); returns (out, final_state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dk = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, dk)
+    k = (x @ p["wk"]).reshape(B, S, H, dk)
+    v = (x @ p["wv"]).reshape(B, S, H, dk)
+    i_pre = x @ p["wi"]
+    f_pre = x @ p["wf"]
+    if state is None:
+        state = (jnp.zeros((B, H, dk, dk), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32),
+                 jnp.zeros((B, H), jnp.float32))
+
+    def step(carry, t):
+        return _mlstm_step(carry, t, dk)
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    gate = jax.nn.silu(x @ p["wo_gate"])
+    return (h * gate) @ p["wo"], state
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": _dense_init(ks[0], (d, d), dtype),
+        "wi": _dense_init(ks[1], (d, d), dtype),
+        "wf": _dense_init(ks[2], (d, d), dtype),
+        "wo_gate": _dense_init(ks[3], (d, d), dtype),
+        "r": _dense_init(ks[4], (d, d), dtype),      # recurrent mixing
+        "wo": _dense_init(ks[5], (d, d), dtype),
+        "out_norm": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_block(x, p, cfg, state=None):
+    B, S, d = x.shape
+    z_pre = x @ p["wz"]
+    i_pre = x @ p["wi"]
+    f_pre = x @ p["wf"]
+    o_pre = x @ p["wo_gate"]
+    if state is None:
+        state = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+
+    def step(carry, t):
+        c, n, m, h_prev = carry
+        zp, ip, fp, op = t
+        rec = (h_prev.astype(x.dtype) @ p["r"]).astype(jnp.float32)
+        zt = jnp.tanh(zp.astype(jnp.float32) + rec)
+        logf = jax.nn.log_sigmoid(fp.astype(jnp.float32) + rec)
+        m_new = jnp.maximum(logf + m, ip.astype(jnp.float32) + rec)
+        i_g = jnp.exp(ip.astype(jnp.float32) + rec - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(op.astype(jnp.float32)) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (z_pre, i_pre, f_pre, o_pre))
+    state, hs = jax.lax.scan(step, state, xs)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    return h @ p["wo"], state
+
+
+# ------------------------------------------------------- mamba-style SSM
+def mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di), dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, di)) * 0.1).astype(dtype),
+        "w_bcdt": _dense_init(ks[2], (di, 2 * N + 1), dtype),
+        "a_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((di, 1), jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "w_out": _dense_init(ks[3], (di, d), dtype, fan_in=di),
+    }
+
+
+def mamba_block(x, p, cfg, state=None):
+    """Selective SSM; returns (out (B,S,d), (ssm_state, conv_tail))."""
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    W = cfg.conv_width
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                 # (B, S, di) each
+
+    if state is None:
+        s0 = jnp.zeros((B, di, N), jnp.float32)
+        conv_tail = jnp.zeros((B, W - 1, di), x.dtype)
+    else:
+        s0, conv_tail = state
+
+    # causal depthwise conv over time (window W)
+    xpad = jnp.concatenate([conv_tail, xi], axis=1)   # (B, S+W-1, di)
+    xc = sum(xpad[:, i: i + S] * p["conv"][i] for i in range(W))
+    xc = jax.nn.silu(xc)
+    new_tail = xpad[:, -(W - 1):] if W > 1 else conv_tail
+
+    bcdt = xc @ p["w_bcdt"]                           # (B, S, 2N+1)
+    Bm, Cm, dt = bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., 2 * N:]
+    # scalar per-position step size, broadcast per-channel via dt_bias.
+    # dt streams at (S, B, di) — kept bf16 on the wire (PERF iteration:
+    # halves the mamba scan's HBM traffic; state math stays fp32).
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    dt = dt.astype(x.dtype)
+    A = -jnp.exp(p["a_log"])                          # (di, N), negative
+
+    def step(s, t):
+        xc_t, b_t, c_t, dt_t = t                      # (B,di) (B,N) (B,N) (B,di)
+        dt_f = dt_t.astype(jnp.float32)
+        dA = jnp.exp(dt_f[..., None] * A[None])       # (B, di, N)
+        dB = dt_f[..., None] * b_t.astype(jnp.float32)[:, None, :]
+        s = dA * s + dB * xc_t.astype(jnp.float32)[..., None]
+        y = jnp.einsum("bdn,bn->bd", s, c_t.astype(jnp.float32))
+        return s, y.astype(xc.dtype)
+
+    xs = (xc.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    s, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, (s, new_tail)

@@ -1,0 +1,373 @@
+"""Generic segmented transformer: init / forward / decode for all 10 archs.
+
+The layer stack is cfg.segments = ((kind, count), ...); every group with
+count > 1 runs as one ``lax.scan`` over stacked parameters — compact HLO
+(512-way SPMD compiles stay tractable) and exact per-block semantics
+(heterogeneous stacks never trace dead branches).
+
+Public entry points:
+  init_params(key, cfg)                        -> params pytree
+  forward(params, cfg, tokens|embeds, ...)     -> logits (B, S, V), aux
+  init_cache(cfg, B, max_seq)                  -> decode cache pytree
+  decode_step(params, cfg, tok, cache, index)  -> logits (B, V), new cache
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from . import mla as mla_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (_dense_init, apply_norm, attention, attn_params, mlp,
+                     mlp_params, norm_params)
+
+ATTN_KINDS = {"dense", "swa", "moe", "moe_swa", "encoder", "hybrid", "hybrid_global"}
+
+
+# ---------------------------------------------------------------------- init
+def _block_params(key, kind, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": norm_params(ks[0], cfg.d_model, cfg.norm_kind, dtype)}
+    if kind in ("dense", "swa", "encoder"):
+        p["attn"] = attn_params(ks[1], cfg, dtype)
+        p["norm2"] = norm_params(ks[2], cfg.d_model, cfg.norm_kind, dtype)
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif kind in ("moe", "moe_swa"):
+        p["attn"] = attn_params(ks[1], cfg, dtype)
+        p["norm2"] = norm_params(ks[2], cfg.d_model, cfg.norm_kind, dtype)
+        p["moe"] = moe_lib.moe_params(ks[3], cfg, dtype)
+    elif kind == "mla":
+        p["attn"] = mla_lib.mla_params(ks[1], cfg, dtype)
+        p["norm2"] = norm_params(ks[2], cfg.d_model, cfg.norm_kind, dtype)
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif kind == "mlstm":
+        p["cell"] = ssm_lib.mlstm_params(ks[1], cfg, dtype)
+    elif kind == "slstm":
+        p["cell"] = ssm_lib.slstm_params(ks[1], cfg, dtype)
+    elif kind in ("hybrid", "hybrid_global"):
+        p["attn"] = attn_params(ks[1], cfg, dtype)
+        p["cell"] = ssm_lib.mamba_params(ks[2], cfg, dtype)
+        p["attn_norm"] = norm_params(ks[3], cfg.d_model, cfg.norm_kind, dtype)
+        p["ssm_norm"] = norm_params(ks[4], cfg.d_model, cfg.norm_kind, dtype)
+        p["norm2"] = norm_params(ks[5], cfg.d_model, cfg.norm_kind, dtype)
+        p["mlp"] = mlp_params(ks[0], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(cfg.segments) + 3)
+    params = {
+        "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), dtype,
+                             fan_in=cfg.d_model),
+        "final_norm": norm_params(keys[1], cfg.d_model, cfg.norm_kind, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense_init(keys[2], (cfg.d_model, cfg.vocab), dtype)
+    for i, (kind, count) in enumerate(cfg.segments):
+        seg_keys = jax.random.split(keys[3 + i], count)
+        stacked = jax.vmap(lambda k: _block_params(k, kind, cfg, dtype))(seg_keys)
+        params[f"seg{i}"] = stacked
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params)))
+
+
+# -------------------------------------------------------------------- blocks
+def _ring_from_full(k, v, kv_len):
+    """Deterministic ring cache from full-sequence KV (B, S, KVH, D).
+
+    Slot s holds the *latest* position p ≡ s (mod kv_len), p < S — a pure
+    gather (no duplicate-index scatter), so prefill->decode handoff is exact
+    for SWA ring caches.
+    """
+    S = k.shape[1]
+    slots = jnp.arange(kv_len)
+    pos = slots + kv_len * ((S - 1 - slots) // kv_len)
+    valid = (pos < S) & (pos >= 0) & (slots < S)
+    safe = jnp.clip(pos, 0, S - 1)
+    rk = jnp.take(k, safe, axis=1)
+    rv = jnp.take(v, safe, axis=1)
+    B = k.shape[0]
+    posb = jnp.broadcast_to(jnp.where(valid, pos, -1), (B, kv_len)).astype(jnp.int32)
+    zero = lambda t: jnp.where(valid[None, :, None, None], t, 0)
+    return {"k": zero(rk), "v": zero(rv), "pos": posb}
+
+
+def _pad_cache_to(kv, max_seq):
+    """Pad full-sequence KV (B, S, ...) to cache length with pos tracking."""
+    B, S = kv["k"].shape[:2]
+    pad = max_seq - S
+    out = {
+        "k": jnp.pad(kv["k"], ((0, 0), (0, pad)) + ((0, 0),) * (kv["k"].ndim - 2)),
+        "v": jnp.pad(kv["v"], ((0, 0), (0, pad)) + ((0, 0),) * (kv["v"].ndim - 2)),
+        "pos": jnp.pad(jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)),
+                       ((0, 0), (0, pad)), constant_values=-1),
+    }
+    return out
+
+
+def _block_fwd(x, p, kind, cfg, positions, mrope_positions, cache_len=None):
+    """Full-sequence block application; returns (x, aux_loss, cache|None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = apply_norm(x, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+    if kind in ("dense", "swa", "encoder", "moe", "moe_swa"):
+        window = cfg.swa_window if kind in ("swa", "moe_swa") else None
+        mask_kind = "bidir" if kind == "encoder" else "causal"
+        a, kv = attention(h, p["attn"], cfg, positions=positions, kind=mask_kind,
+                          window=window, mrope_positions=mrope_positions)
+        x = x + a
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        if kind in ("moe", "moe_swa"):
+            x = x + moe_lib.moe_mlp(h2, p["moe"], cfg)
+            aux = aux + moe_lib.aux_load_balance_loss(h2, p["moe"], cfg)
+        else:
+            x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        if cache_len is not None:
+            if window is not None and cache_len > cfg.swa_window + 128:
+                ring = min(cache_len, cfg.swa_window + 128)
+                cache = _ring_from_full(kv["k"], kv["v"], ring)
+            elif window is not None:
+                cache = _ring_from_full(kv["k"], kv["v"], cache_len)
+            else:
+                cache = _pad_cache_to(kv, cache_len)
+    elif kind == "mla":
+        a, kv = mla_lib.mla_attention(h, p["attn"], cfg, positions=positions)
+        x = x + a
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        if cache_len is not None:
+            S = kv["c_kv"].shape[1]
+            pad = cache_len - S
+            cache = {"c_kv": jnp.pad(kv["c_kv"], ((0, 0), (0, pad), (0, 0))),
+                     "k_rope": jnp.pad(kv["k_rope"], ((0, 0), (0, pad), (0, 0)))}
+    elif kind == "mlstm":
+        out, st = ssm_lib.mlstm_block(h, p["cell"], cfg)
+        x = x + out
+        cache = st if cache_len is not None else None
+    elif kind == "slstm":
+        out, st = ssm_lib.slstm_block(h, p["cell"], cfg)
+        x = x + out
+        cache = st if cache_len is not None else None
+    elif kind in ("hybrid", "hybrid_global"):
+        window = cfg.swa_window if kind == "hybrid" else None
+        a, kv = attention(h, p["attn"], cfg, positions=positions, window=window)
+        s, st = ssm_lib.mamba_block(h, p["cell"], cfg)
+        a = apply_norm(a, p["attn_norm"], cfg.norm_kind, cfg.norm_eps)
+        s = apply_norm(s, p["ssm_norm"], cfg.norm_kind, cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        if cache_len is not None:
+            if window is not None:
+                ring = min(cache_len, cfg.swa_window + 128)
+                ckv = _ring_from_full(kv["k"], kv["v"], ring)
+            else:
+                ckv = _pad_cache_to(kv, cache_len)
+            cache = {"kv": ckv, "ssm": st}
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux, cache
+
+
+def forward(params, cfg, tokens=None, embeds=None, mrope_positions=None,
+            build_cache_len=None, last_logit_only=False):
+    """Token ids (B, S) or precomputed frame/patch embeds (B, S, d).
+
+    Returns (logits (B, S, V) model-dtype, aux_loss scalar) — or, with
+    ``build_cache_len`` (prefill), (logits, aux, cache) where cache is the
+    decode cache pytree filled up to position S-1.  ``last_logit_only``
+    slices the final hidden state before the unembed matmul (serving
+    prefill must never materialize B x S x V logits).
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+        x = constrain(x, "batch", "seq", "embed")
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, (kind, count) in enumerate(cfg.segments):
+        seg = params[f"seg{i}"]
+        body = functools.partial(_block_fwd, kind=kind, cfg=cfg,
+                                 positions=positions,
+                                 mrope_positions=mrope_positions,
+                                 cache_len=build_cache_len)
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+        if count == 1:
+            lp = jax.tree.map(lambda t: t[0], seg)
+            x, aux, c = body(x, lp)
+            aux_total = aux_total + aux
+            if build_cache_len is not None:
+                caches[f"seg{i}"] = jax.tree.map(lambda t: t[None], c)
+        else:
+            def scan_fn(carry, lp):
+                x, acc = carry
+                x, aux, c = body(x, lp)
+                return (x, acc + aux), c
+            (x, aux_total), cs = jax.lax.scan(scan_fn, (x, aux_total), seg)
+            if build_cache_len is not None:
+                caches[f"seg{i}"] = cs
+
+    x = apply_norm(x, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+    if last_logit_only:
+        x = x[:, -1:]
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if build_cache_len is not None:
+        return logits, aux_total, caches
+    return logits, aux_total
+
+
+# -------------------------------------------------------------------- decode
+def _init_block_cache(kind, cfg, B, max_seq, dtype):
+    hd = cfg.resolved_head_dim
+    if kind == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((B, max_seq, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((B, max_seq, m.qk_rope_head_dim), dtype)}
+    if kind == "mlstm":
+        H, dk = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return (jnp.zeros((B, H, dk, dk), jnp.float32),
+                jnp.zeros((B, H, dk), jnp.float32),
+                jnp.zeros((B, H), jnp.float32))
+    if kind == "slstm":
+        return tuple(jnp.zeros((B, cfg.d_model), jnp.float32) for _ in range(4))
+    kv_len = max_seq
+    if kind in ("swa", "moe_swa", "hybrid"):
+        # SWA layers keep a *ring* cache of window + slack slots; masking
+        # uses stored true positions (layers.attention), so 500k-context
+        # decode carries O(window) state, not O(context).
+        kv_len = min(max_seq, max(cfg.swa_window + 128, 256))
+    kv_dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+    kv = {"k": jnp.zeros((B, kv_len, cfg.n_kv_heads, hd), kv_dtype),
+          "v": jnp.zeros((B, kv_len, cfg.n_kv_heads, hd), kv_dtype),
+          "pos": jnp.full((B, kv_len), -1, jnp.int32)}
+    if cfg.kv_cache_dtype == "int8":
+        kv["k_scale"] = jnp.zeros((B, kv_len, cfg.n_kv_heads), jnp.float32)
+        kv["v_scale"] = jnp.zeros((B, kv_len, cfg.n_kv_heads), jnp.float32)
+    if kind in ("hybrid", "hybrid_global"):
+        di, N, W = cfg.ssm_expand * cfg.d_model, cfg.ssm_state, cfg.conv_width
+        return {"kv": kv, "ssm": (jnp.zeros((B, di, N), jnp.float32),
+                                  jnp.zeros((B, W - 1, di), dtype))}
+    return kv
+
+
+def init_cache(cfg, B, max_seq):
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {}
+    for i, (kind, count) in enumerate(cfg.segments):
+        one = _init_block_cache(kind, cfg, B, max_seq, dtype)
+        cache[f"seg{i}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (count,) + t.shape), one)
+    return cache
+
+
+def _block_decode(x, p, c, kind, cfg, index, positions):
+    """Single-token block step; returns (x, new_cache_slice)."""
+    h = apply_norm(x, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+    if kind in ("dense", "swa", "encoder", "moe", "moe_swa"):
+        window = cfg.swa_window if kind in ("swa", "moe_swa") else None
+        kv_len = c["k"].shape[1]
+        slot = index % kv_len            # identity for full-length caches
+        a, nc = attention(h, p["attn"], cfg, positions=positions,
+                          window=window, cache=c, cache_index=slot,
+                          true_index=index)
+        x = x + a
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        if kind in ("moe", "moe_swa"):
+            x = x + moe_lib.moe_mlp(h2, p["moe"], cfg)
+        else:
+            x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        return x, nc
+    if kind == "mla":
+        a, nc = mla_lib.mla_attention(h, p["attn"], cfg, positions=positions,
+                                      cache=c, cache_index=index)
+        x = x + a
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        return x, nc
+    if kind == "mlstm":
+        out, ns = ssm_lib.mlstm_block(h, p["cell"], cfg, state=c)
+        return x + out, ns
+    if kind == "slstm":
+        out, ns = ssm_lib.slstm_block(h, p["cell"], cfg, state=c)
+        return x + out, ns
+    if kind in ("hybrid", "hybrid_global"):
+        window = cfg.swa_window if kind == "hybrid" else None
+        kv_len = c["kv"]["k"].shape[1]
+        slot = index % kv_len
+        a, nkv = attention(h, p["attn"], cfg, positions=positions,
+                           window=window, cache=c["kv"], cache_index=slot,
+                           true_index=index)
+        s, nssm = ssm_lib.mamba_block(h, p["cell"], cfg, state=c["ssm"])
+        a = apply_norm(a, p["attn_norm"], cfg.norm_kind, cfg.norm_eps)
+        s = apply_norm(s, p["ssm_norm"], cfg.norm_kind, cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+        h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+        x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        return x, {"kv": nkv, "ssm": nssm}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg, tokens, cache, index):
+    """One decode step.  tokens (B,) int32, index scalar int32 position.
+
+    Returns (logits (B, V) fp32, new_cache).
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]           # (B, 1, d)
+    positions = jnp.full((B, 1), index, jnp.int32)
+
+    new_cache = {}
+    for i, (kind, count) in enumerate(cfg.segments):
+        seg_p, seg_c = params[f"seg{i}"], cache[f"seg{i}"]
+        if count == 1:
+            lp = jax.tree.map(lambda t: t[0], seg_p)
+            lc = jax.tree.map(lambda t: t[0], seg_c)
+            x, nc = _block_decode(x, lp, lc, kind, cfg, index, positions)
+            new_cache[f"seg{i}"] = jax.tree.map(lambda t: t[None], nc)
+        else:
+            def scan_fn(x, pc):
+                lp, lc = pc
+                x, nc = _block_decode(x, lp, lc, kind, cfg, index, positions)
+                return x, nc
+            x, nc = jax.lax.scan(scan_fn, x, (seg_p, seg_c))
+            new_cache[f"seg{i}"] = nc
+
+    x = apply_norm(x, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x[:, 0] @ unembed).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------- loss
+def cross_entropy(logits, labels, mask=None):
+    """Mean token-level CE; labels int32 (B, S).
+
+    Logits arrive in model dtype (bf16) — the fp32 upcast happens inside the
+    reduction so XLA fuses it without materializing an fp32 logits tensor.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline model (task-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+# DCN (cross-pod) egress per host is far thinner; used for the "pod" axis.
+DCN_BW_PER_HOST = 25e9 / 8    # ~25 Gbit/s -> bytes/s, conservative

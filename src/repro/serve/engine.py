@@ -1,0 +1,165 @@
+"""Continuous-batching serving engine over the NB-tree paged KV cache.
+
+The engine demonstrates the paper's index as the allocator/indexing layer of
+an LM server:
+
+  * admission: waiting requests claim decode slots as sequences finish;
+  * prefill: full-sequence forward (serve/steps.make_prefill_step) writes
+    per-position KV into *pages* through the NB-tree block index;
+  * decode: every step builds block tables by batched NB-tree queries and
+    attends with the paged_attention Pallas kernel;
+  * upkeep: ``cache.maintain(budget)`` runs each step — bounded index work
+    per step (deamortization), so no request ever observes an allocator
+    stall (the serving analogue of the paper's worst-case insertion bound).
+
+The paged decode path supports attention-backbone archs (dense/swa blocks);
+recurrent archs carry O(1) state and use the contiguous decode path — the
+index still tracks their state slots.  CPU-scale: reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..models import transformer as T
+from ..models.layers import apply_norm, apply_rope, mlp, rope_angles
+from .kv_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class PagedDecoder:
+    """Single-token decode for dense/swa stacks over paged KV."""
+
+    def __init__(self, cfg, params, cache: PagedKVCache):
+        assert all(k in ("dense", "swa") for k, _ in cfg.segments), (
+            "paged decode path supports attention backbones")
+        self.cfg, self.params, self.cache = cfg, params, cache
+        # flatten scanned segments into per-layer param list (host-side,
+        # engine scale) so each layer can address its own pages.
+        self.layer_params = []
+        self.layer_kinds = []
+        for i, (kind, count) in enumerate(cfg.segments):
+            seg = params[f"seg{i}"]
+            for j in range(count):
+                self.layer_params.append(jax.tree.map(lambda t: t[j], seg))
+                self.layer_kinds.append(kind)
+
+    def prefill(self, seq_ids, tokens):
+        """tokens (B, S) — runs forward, writes all KV into pages."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        for sid in np.asarray(seq_ids):
+            self.cache.extend(int(sid), S)
+        logits, _aux, kv_cache = T.forward(self.params, cfg, tokens=tokens,
+                                           build_cache_len=S, last_logit_only=True)
+        # copy contiguous prefill KV into pages, page-aligned chunks.
+        li = 0
+        for i, (kind, count) in enumerate(cfg.segments):
+            seg_cache = kv_cache[f"seg{i}"]
+            for j in range(count):
+                k = np.asarray(seg_cache["k"][j], dtype=np.float32)  # (B,S,KVH,D)
+                v = np.asarray(seg_cache["v"][j], dtype=np.float32)
+                for pos in range(S):
+                    self.cache.write_token(
+                        li, seq_ids, np.full(B, pos),
+                        jnp.asarray(k[:, pos]), jnp.asarray(v[:, pos]))
+                li += 1
+        self.cache.maintain(4)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+
+    def decode(self, seq_ids, tokens, position: int):
+        """One decode step for all sequences at the same position."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        for sid in np.asarray(seq_ids):
+            self.cache.extend(int(sid), position + 1)
+        self.cache.maintain(2)
+        max_pages = -(-(position + 1) // self.cache.S)
+        tables = self.cache.block_tables(seq_ids, max_pages)
+        lens = jnp.full((B,), position + 1, jnp.int32)
+
+        x = self.params["embed"][tokens][:, None, :]
+        positions = jnp.full((B, 1), position, jnp.int32)
+        hd = cfg.resolved_head_dim
+        for li, (p, kind) in enumerate(zip(self.layer_params, self.layer_kinds)):
+            h = apply_norm(x, p["norm1"], cfg.norm_kind, cfg.norm_eps)
+            q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+            if cfg.qk_norm:
+                from ..models.layers import rms_norm
+                q = rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            cos, sin = rope_angles(positions, hd, cfg.rope_base)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            self.cache.write_token(li, seq_ids, np.full(B, position),
+                                   k[:, 0], v[:, 0])
+            kp, vp = self.cache.layer_pages(li)
+            g = cfg.n_heads // cfg.n_kv_heads
+            qh = q[:, 0].reshape(B, cfg.n_kv_heads, g, hd)
+            out = ops.paged_attention(qh, kp, vp, tables, lens)
+            a = out.reshape(B, 1, cfg.n_heads * hd) @ p["attn"]["wo"]
+            x = x + a
+            h2 = apply_norm(x, p["norm2"], cfg.norm_kind, cfg.norm_eps)
+            x = x + mlp(h2, p["mlp"], cfg.mlp_kind)
+        x = apply_norm(x, self.params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+        unembed = (self.params["embed"].T if cfg.tie_embeddings
+                   else self.params["unembed"])
+        logits = (x[:, 0] @ unembed).astype(jnp.float32)
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+class Engine:
+    """Minimal continuous-batching loop (batched requests, CPU scale)."""
+
+    def __init__(self, cfg, params, *, max_batch: int = 4, n_pages: int = 512,
+                 page_size: int = 16):
+        self.cfg, self.params = cfg, params
+        self.max_batch = max_batch
+        self.cache = PagedKVCache(cfg.n_layers, cfg.n_kv_heads,
+                                  cfg.resolved_head_dim,
+                                  n_pages=n_pages, page_size=page_size,
+                                  dtype=jnp.float32)
+        self.decoder = PagedDecoder(cfg, params, self.cache)
+        self._next_sid = 0
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve a request list to completion (same-length prompts batched)."""
+        queue = list(requests)
+        while queue:
+            batch = queue[: self.max_batch]
+            queue = queue[self.max_batch:]
+            sids = []
+            for r in batch:
+                sid = self._next_sid
+                self._next_sid += 1
+                self.cache.add_sequence(sid)
+                sids.append(sid)
+            toks = jnp.asarray([r.prompt for r in batch], jnp.int32)
+            S = toks.shape[1]
+            nxt = self.decoder.prefill(np.asarray(sids), toks)
+            for r, t in zip(batch, np.asarray(nxt)):
+                r.out.append(int(t))
+            steps = max(r.max_new_tokens for r in batch) - 1
+            for s in range(steps):
+                nxt = self.decoder.decode(np.asarray(sids), nxt, S + s)
+                for r, t in zip(batch, np.asarray(nxt)):
+                    if len(r.out) < r.max_new_tokens:
+                        r.out.append(int(t))
+            for r, sid in zip(batch, sids):
+                r.done = True
+                self.cache.free_sequence(sid)
+        return requests

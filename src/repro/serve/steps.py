@@ -1,0 +1,37 @@
+"""Jittable serving steps (prefill and decode) used by the engine and dryrun."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+
+
+def make_prefill_step(cfg, cache_len: int):
+    """(params, tokens|embeds) -> (last_logits (B,1,V), cache)."""
+    def prefill(params, batch):
+        kw = {"embeds": batch["embeds"]} if cfg.encoder_only else {"tokens": batch["tokens"]}
+        logits, _aux, cache = T.forward(params, cfg, build_cache_len=cache_len,
+                                        last_logit_only=True, **kw)
+        return logits, cache
+    return prefill
+
+
+def make_encode_step(cfg):
+    """Encoder-only archs: full-sequence forward (no cache, no decode)."""
+    def encode(params, batch):
+        logits, _aux = T.forward(params, cfg, embeds=batch["embeds"])
+        return logits
+    return encode
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, cache, tokens (B,), index) -> (next, cache).
+
+    Greedy argmax here; the engine layer samples (serve/engine.py).
+    """
+    def serve_step(params, cache, tokens, index):
+        logits, new_cache = T.decode_step(params, cfg, tokens, cache, index)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return serve_step

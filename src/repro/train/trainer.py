@@ -1,0 +1,100 @@
+"""Training loop: data pipeline -> train step -> checkpoint/restart/FT hooks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..distributed.fault_tolerance import HeartbeatMonitor, StragglerDetector
+from ..distributed.sharding import param_specs
+from ..models import transformer as T
+from ..optim import adamw
+from .train_step import make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg, *, mesh=None, opt_cfg=None, ckpt_dir=None,
+                 num_microbatches: int = 1, seed: int = 0,
+                 grad_compression: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig()
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.step_fn = make_train_step(cfg, self.opt_cfg,
+                                       num_microbatches=num_microbatches,
+                                       grad_compression=grad_compression,
+                                       mesh=mesh)
+        self.params = T.init_params(jax.random.PRNGKey(seed), cfg)
+        self.opt_state = adamw.init(self.params)
+        self.step = 0
+        self.monitor = HeartbeatMonitor([0])
+        self.straggler = StragglerDetector([0])
+
+        if mesh is not None:
+            pspecs = param_specs(self.params, mesh)
+            psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+            self.params = jax.device_put(self.params, psh)
+            osh = {"m": psh, "v": psh,
+                   "count": NamedSharding(mesh, P())}
+            self.opt_state = jax.device_put(self.opt_state, osh)
+            self._jit = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        else:
+            self._jit = jax.jit(self.step_fn, donate_argnums=(0, 1))
+
+        if self.ckpt is not None:
+            last = self.ckpt.latest_step()
+            if last is not None:
+                self.restore(last)
+
+    # ------------------------------------------------------------------ loop
+    def run(self, batches, num_steps: int, *, ckpt_every: int = 0,
+            log_every: int = 10) -> list[dict]:
+        history = []
+        it = iter(batches)
+        ctx = jax.sharding.set_mesh(self.mesh) if self.mesh is not None else None
+        if ctx is not None:
+            ctx.__enter__()
+        try:
+            for _ in range(num_steps):
+                batch = next(it)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.time()
+                self.params, self.opt_state, metrics = self._jit(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                self.step += 1
+                self.straggler.record(0, dt)
+                self.monitor.beat(0, self.step)
+                history.append({"step": self.step, "loss": loss,
+                                "sec": dt,
+                                "grad_norm": float(metrics["grad_norm"])})
+                if log_every and self.step % log_every == 0:
+                    print(f"step {self.step}: loss={loss:.4f} "
+                          f"({dt:.2f}s/step)", flush=True)
+                if ckpt_every and self.ckpt and self.step % ckpt_every == 0:
+                    self.save()
+        finally:
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        return history
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, blocking: bool = True) -> None:
+        assert self.ckpt is not None
+        state = {"params": self.params,
+                 "opt": {k: self.opt_state[k] for k in ("m", "v", "count")}}
+        self.ckpt.save(self.step, state, blocking=blocking)
+
+    def restore(self, step: int) -> None:
+        like = {"params": self.params,
+                "opt": {k: self.opt_state[k] for k in ("m", "v", "count")}}
+        state = self.ckpt.restore(step, like)
+        self.params = state["params"]
+        self.opt_state.update(state["opt"])
+        self.step = step
+        print(f"restored checkpoint @ step {step}", flush=True)

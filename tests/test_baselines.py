@@ -1,0 +1,84 @@
+"""LSM / B+-tree / B^eps baselines: correctness + the paper's comparative claims."""
+import numpy as np
+import pytest
+
+from repro.core.bepsilon import BEpsilonTree
+from repro.core.btree import BPlusTree, BPlusTreeBulk
+from repro.core.lsm import LSMTree
+from repro.core.refimpl import NBTree
+
+
+def _keys(rng, n):
+    return rng.choice(np.arange(1, 10_000_000, dtype=np.uint64), n, replace=False)
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (LSMTree, dict(mem_pairs=256)),
+    (BPlusTree, {}),
+    (BEpsilonTree, dict(node_bytes=1 << 14, cached_levels=1)),
+])
+def test_baseline_roundtrip(rng, cls, kw):
+    keys = _keys(rng, 4000)
+    idx = cls(**kw)
+    for i, k in enumerate(keys):
+        idx.insert(k, i)
+    for i in [0, 99, 1234, 3999]:
+        assert idx.get(keys[i]) == i, cls.__name__
+    for k in rng.integers(10_000_001, 2**63, 50).astype(np.uint64):
+        assert idx.get(k) is None
+
+
+def test_lsm_delete(rng):
+    keys = _keys(rng, 2000)
+    lsm = LSMTree(mem_pairs=256)
+    for i, k in enumerate(keys):
+        lsm.insert(k, i)
+    for k in keys[:50]:
+        lsm.delete(k)
+    assert all(lsm.get(k) is None for k in keys[:50])
+    assert lsm.get(keys[60]) == 60
+
+
+def test_bulk_btree_query(rng):
+    keys = _keys(rng, 5000)
+    bt = BPlusTreeBulk(keys, np.arange(5000, dtype=np.int64))
+    for i in [0, 4999, 777]:
+        assert bt.get(keys[i]) == i
+
+
+def test_paper_claim_nb_worst_case_far_below_lsm(rng):
+    """Fig. 7: NB-tree max insertion time orders of magnitude below LSM."""
+    keys = _keys(rng, 40_000)
+    nb = NBTree(f=3, sigma=1024)
+    lsm = LSMTree(mem_pairs=1024)
+    t_nb = max(nb.insert(k, i) for i, k in enumerate(keys))
+    t_lsm = max(lsm.insert(k, i) for i, k in enumerate(keys))
+    assert t_nb * 100 < t_lsm, (t_nb, t_lsm)
+
+
+def test_paper_claim_nb_avg_insert_below_btree(rng):
+    """Table 2 : NB-tree amortized insertion far below B+-tree's."""
+    keys = _keys(rng, 20_000)
+    nb = NBTree(f=3, sigma=1024)
+    bt = BPlusTree()
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+        bt.insert(k, i)
+    nb.drain()
+    nb_avg = nb.cm.time / len(keys)
+    bt_avg = bt.cm.time / len(keys)
+    assert nb_avg * 10 < bt_avg, (nb_avg, bt_avg)
+
+
+def test_paper_claim_nb_query_near_bulk_btree(rng):
+    """Fig. 8: NB-tree average query within ~2x of bulk-loaded B+-tree."""
+    keys = _keys(rng, 30_000)
+    nb = NBTree(f=3, sigma=2048)
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+    nb.drain()
+    bt = BPlusTreeBulk(keys, np.arange(len(keys), dtype=np.int64))
+    q = rng.choice(keys, 400, replace=False)
+    nb_t = np.mean([nb.query(k)[1] for k in q])
+    bt_t = np.mean([bt.query(k)[1] for k in q])
+    assert nb_t < 2.0 * bt_t, (nb_t, bt_t)

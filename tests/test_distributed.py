@@ -1,0 +1,185 @@
+"""Distribution: sharded train parity, compression, dryrun path, resize.
+
+Runs on 8 host-platform devices (set before jax initializes via conftest?
+No — via env in this module import order; pytest-forked not available, so
+this file must be run in the same session: we request 8 devices in
+conftest_distributed plugin below).
+"""
+import os
+
+# must happen before jax backend init; harmless if jax already initialized
+# with >= 8 devices (the whole test session sets this via tests/conftest.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import param_specs
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_mesh
+from repro.models import registry
+from repro.models import transformer as T
+from repro.optim import adamw, compression
+from repro.train.train_step import make_train_step
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 host-platform devices "
+    "(run pytest with XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(registry.get_config("qwen3-8b").reduced(),
+                               dtype="float32", remat="none")
+
+
+def _batch(cfg, B=8, S=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"tokens": jax.random.randint(k, (B, S), 1, cfg.vocab)}
+
+
+def test_sharded_train_matches_single_device(mesh, cfg):
+    """One sharded step == one unsharded step (GSPMD is semantics-free)."""
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    batch = _batch(cfg)
+    step = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3))
+
+    p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+    pspecs = param_specs(params, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    params_s = jax.device_put(params, psh)
+    opt_s = jax.device_put(opt, {"m": psh, "v": psh,
+                                 "count": NamedSharding(mesh, P())})
+    with jax.sharding.set_mesh(mesh):
+        bsh = jax.tree.map(lambda _: NamedSharding(mesh, P(("pod", "data"))),
+                           batch)
+        batch_s = jax.device_put(batch, bsh)
+        p2, o2, m2 = jax.jit(step)(params_s, opt_s, batch_s)
+
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    l1 = jax.tree_util.tree_leaves(p1)[1]
+    l2 = jax.tree_util.tree_leaves(p2)[1]
+    np.testing.assert_allclose(np.array(l1), np.array(l2), atol=2e-5, rtol=2e-5)
+
+
+def test_grad_compression_close_to_exact(cfg):
+    """int8 error-feedback compressed step stays close to the exact step and
+    the error buffers capture the residual.
+
+    Runs on a ("pod","data") mesh — the DCN-compression deployment shape;
+    3-axis meshes hit a jaxlib 0.8.2 partitioner CHECK (see
+    optim/compression.py KNOWN LIMITATION).
+    """
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    batch = _batch(cfg)
+
+    exact = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3))
+    comp = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3),
+                           grad_compression=True, mesh=mesh)
+
+    pspecs = param_specs(params, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    with jax.sharding.set_mesh(mesh):
+        params_s = jax.device_put(params, psh)
+        opt_s = jax.device_put(opt, {"m": psh, "v": psh,
+                                     "count": NamedSharding(mesh, P())})
+        opt_s["error"] = compression.init_error(params, 2)
+        bsh = jax.tree.map(lambda _: NamedSharding(mesh, P(("pod", "data"))), batch)
+        batch_s = jax.device_put(batch, bsh)
+        p2, o2, m2 = jax.jit(comp)(params_s, opt_s, batch_s)
+        p1, o1, m1 = jax.jit(exact)(params_s, {k: opt_s[k] for k in ("m", "v", "count")},
+                                    batch_s)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    # updates differ only by quantization noise
+    l1 = np.array(jax.tree_util.tree_leaves(p1)[1], np.float32)
+    l2 = np.array(jax.tree_util.tree_leaves(p2)[1], np.float32)
+    np.testing.assert_allclose(l1, l2, atol=5e-4, rtol=5e-2)
+    err = jax.tree_util.tree_leaves(o2["error"])
+    assert any(float(jnp.abs(e).max()) > 0 for e in err), "no residual captured?"
+
+
+def test_microbatched_grads_match(mesh, cfg):
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    batch = _batch(cfg, B=8)
+    s1 = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3), num_microbatches=1)
+    s4 = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3), num_microbatches=4)
+    _, _, m1 = jax.jit(s1)(params, opt, batch)
+    _, _, m4 = jax.jit(s4)(jax.tree.map(jnp.copy, params), adamw.init(params), batch)
+    # microbatch losses are averaged over slices: equal for equal slices
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 5e-3
+
+
+@pytest.mark.parametrize("kind,arch", [
+    ("train", "qwen3-8b"), ("prefill", "deepseek-moe-16b"),
+    ("decode", "hymba-1.5b"), ("decode", "xlstm-1.3b"),
+])
+def test_dryrun_lowering_path(mesh, kind, arch):
+    """The exact dryrun code path at reduced scale: must compile + report."""
+    cfg = registry.get_config(arch).reduced()
+    sp = ShapeSpec("t", 64 if kind != "prefill" else 128,
+                   8 if kind != "prefill" else 4, kind)
+    rec = lower_cell(arch, kind, mesh, cfg=cfg, shape=sp, cost_correct=True)
+    assert rec["status"] == "ok", rec
+    r = rec["roofline"]
+    assert r["flops_per_dev"] > 0
+    assert r["t_memory"] > 0
+    assert rec["memory_analysis"]["peak_gib"] > 0
+
+
+def test_elastic_resize(tmp_path, cfg):
+    """Checkpoint on mesh A, restore resharded onto smaller mesh B, resume."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.distributed.fault_tolerance import elastic_resize
+
+    mesh_a = make_mesh((4, 2), ("data", "model"))
+    mesh_b = make_mesh((2, 2), ("data", "model"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"params": params, "opt": opt})
+
+    state_like = {"params": params, "opt": opt}
+    state = elastic_resize(ck, 1, state_like, mesh_b, param_specs)
+    # restored params identical, now placed for mesh_b
+    l0 = np.array(jax.tree_util.tree_leaves(params)[0], np.float32)
+    l1 = np.array(jax.tree_util.tree_leaves(state["params"])[0], np.float32)
+    np.testing.assert_allclose(l0, l1)
+    # one step on the new mesh works
+    step = make_train_step(cfg, adamw.AdamWConfig(lr=1e-3))
+    with jax.sharding.set_mesh(mesh_b):
+        batch = _batch(cfg, B=4)
+        p, o, m = jax.jit(step)(state["params"], state["opt"], batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_straggler_and_heartbeat():
+    from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                                   StragglerDetector)
+    hosts = list(range(8))
+    mon = HeartbeatMonitor(hosts, timeout_steps=3)
+    det = StragglerDetector(hosts, warmup=2)
+    for step in range(1, 12):
+        for h in hosts:
+            if h == 5 and step > 6:
+                continue            # host 5 dies at step 7
+            mon.beat(h, step)
+            det.record(h, 0.1 if h != 3 else 0.5)   # host 3 straggles
+    dead = mon.advance(12)
+    assert dead == [5], dead
+    assert det.stragglers() == [3]

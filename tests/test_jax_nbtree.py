@@ -1,0 +1,103 @@
+"""Device-tier NB-tree (core/jax_nbtree): behaviour, invariants, ref-parity."""
+import numpy as np
+import pytest
+
+from repro.core.jax_nbtree import NBTreeIndex
+from repro.core.refimpl import NBTree as RefNBTree
+
+
+def _keys(rng, n):
+    return rng.choice(np.arange(1, 2**31, dtype=np.uint32), n, replace=False)
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    rng = np.random.default_rng(3)
+    keys = _keys(rng, 20_000)
+    idx = NBTreeIndex(f=4, sigma=1024, max_nodes=64)
+    B = 512
+    for i in range(0, len(keys), B):
+        idx.insert_batch(keys[i:i + B], np.arange(i, i + len(keys[i:i + B]), dtype=np.int32))
+        idx.maintain(2)
+    idx.drain()
+    return idx, keys
+
+
+def test_roundtrip_and_invariants(loaded):
+    idx, keys = loaded
+    idx.check_invariants()
+    present, vals = idx.query_batch(keys[:4096])
+    assert np.array(present).all()
+    assert np.array_equal(np.array(vals), np.arange(4096, dtype=np.int32))
+
+
+def test_negatives(loaded):
+    idx, keys = loaded
+    rng = np.random.default_rng(4)
+    neg = rng.integers(2**31, 2**32 - 2, 2048).astype(np.uint32)
+    present, _ = idx.query_batch(neg)
+    assert not np.array(present).any()
+
+
+def test_delete_update():
+    rng = np.random.default_rng(5)
+    keys = _keys(rng, 6000)
+    idx = NBTreeIndex(f=4, sigma=512, max_nodes=64)
+    idx.insert_batch(keys, np.arange(len(keys), dtype=np.int32))
+    idx.drain()
+    idx.delete_batch(keys[:100])
+    idx.insert_batch(keys[100:200], np.full(100, 42, np.int32))
+    idx.drain()
+    p, v = idx.query_batch(keys[:200])
+    p, v = np.array(p), np.array(v)
+    assert not p[:100].any()
+    assert p[100:].all() and (v[100:] == 42).all()
+
+
+def test_maintenance_budget_bounded():
+    """maintain(k) performs at most k units — the deamortization contract."""
+    rng = np.random.default_rng(6)
+    idx = NBTreeIndex(f=4, sigma=512, max_nodes=128)
+    keys = _keys(rng, 8000)
+    max_pending_drop = 0
+    for i in range(0, len(keys), 256):
+        idx.insert_batch(keys[i:i + 256], np.arange(256, dtype=np.int32))
+        before = len(idx._pending)
+        idx.maintain(1)
+        after = len(idx._pending)
+        # one unit can retire at most one queue entry (it may also enqueue)
+        max_pending_drop = max(max_pending_drop, before - after)
+    assert max_pending_drop <= 1
+    idx.drain()
+    idx.check_invariants()
+
+
+def test_parity_with_refimpl():
+    """Same ops through both tiers -> same visible key-value map."""
+    rng = np.random.default_rng(7)
+    keys = _keys(rng, 4000)
+    dev = NBTreeIndex(f=3, sigma=256, max_nodes=128)
+    ref = RefNBTree(f=3, sigma=256)
+    dev.insert_batch(keys, np.arange(len(keys), dtype=np.int32))
+    dev.drain()
+    for i, k in enumerate(keys):
+        ref.insert(np.uint64(k), i)
+    ref.drain()
+    q = rng.choice(keys, 500, replace=False)
+    p, v = dev.query_batch(q)
+    p, v = np.array(p), np.array(v)
+    for j, k in enumerate(q):
+        rv = ref.get(np.uint64(k))
+        assert p[j] and v[j] == rv, (k, v[j], rv)
+
+
+def test_grow_tables():
+    rng = np.random.default_rng(8)
+    idx = NBTreeIndex(f=3, sigma=64, max_nodes=8)   # forces growth
+    keys = _keys(rng, 3000)
+    idx.insert_batch(keys, np.arange(len(keys), dtype=np.int32))
+    idx.drain()
+    idx.check_invariants()
+    assert idx.max_nodes > 8
+    p, _ = idx.query_batch(keys[:512])
+    assert np.array(p).all()

@@ -1,0 +1,109 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _sorted_run(rng, n):
+    return np.sort(rng.choice(2**31, n, replace=False)).astype(np.uint32)
+
+
+# ------------------------------------------------------------------- merge
+@pytest.mark.parametrize("n,m", [(1, 1), (128, 128), (100, 57), (1024, 1024),
+                                 (3000, 17), (5000, 2500), (8192, 8192)])
+def test_merge_matches_ref(rng, n, m):
+    ak, bk = _sorted_run(rng, n), _sorted_run(rng, m)
+    av = rng.integers(0, 2**31, n).astype(np.int32)
+    bv = rng.integers(0, 2**31, m).astype(np.int32)
+    ok, ov = ops.merge_sorted(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    rk, rv = ref.merge_sorted_ref(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert np.array_equal(np.array(ok)[: n + m], np.array(rk)[: n + m])
+    assert np.array_equal(np.array(ov)[: n + m], np.array(rv)[: n + m])
+
+
+def test_merge_tiebreak_a_first():
+    ak = np.array([5, 10, 20], np.uint32); av = np.array([1, 2, 3], np.int32)
+    bk = np.array([10, 20, 30], np.uint32); bv = np.array([-1, -2, -3], np.int32)
+    ok, ov = ops.merge_sorted(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert list(np.array(ok)[:6]) == [5, 10, 10, 20, 20, 30]
+    assert list(np.array(ov)[:6]) == [1, 2, -1, 3, -2, -3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 600), m=st.integers(1, 600), seed=st.integers(0, 999))
+def test_merge_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    ak, bk = _sorted_run(rng, n), _sorted_run(rng, m)
+    av = np.arange(n, dtype=np.int32); bv = np.arange(m, dtype=np.int32)
+    ok, _ = ops.merge_sorted(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    ok = np.array(ok)[: n + m]
+    assert np.all(ok[:-1] <= ok[1:]), "merge output not sorted"
+    assert sorted(ok.tolist()) == sorted(np.concatenate([ak, bk]).tolist())
+
+
+# ------------------------------------------------------------------ search
+@pytest.mark.parametrize("n,q", [(16, 8), (1000, 300), (5000, 2048), (65536, 100)])
+def test_search_matches_ref(rng, n, q):
+    run = _sorted_run(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    queries = np.concatenate([
+        rng.choice(run, q // 2), rng.integers(2**31, 2**32 - 2, q - q // 2).astype(np.uint32)])
+    f, v, i = ops.sorted_search(jnp.array(run), jnp.array(vals), jnp.array(queries))
+    rf, rv, ri = ref.sorted_search_ref(jnp.array(run), jnp.array(vals), jnp.array(queries))
+    assert np.array_equal(np.array(f).astype(bool), np.array(rf))
+    sel = np.array(f) == 1
+    assert np.array_equal(np.array(v)[sel], np.array(rv)[np.array(rf)])
+
+
+# ------------------------------------------------------------------- bloom
+@pytest.mark.parametrize("n,bpk", [(100, 10), (4000, 10), (4000, 16), (20000, 8)])
+def test_bloom_no_false_negatives(rng, n, bpk):
+    keys = rng.choice(2**31, n, replace=False).astype(np.uint32)
+    nbits = -(-n * bpk // (32 * 128)) * 32 * 128
+    words = ops.bloom_build(jnp.array(keys), nbits)
+    assert np.all(np.array(ops.bloom_probe(words, jnp.array(keys), nbits=nbits)) == 1)
+
+
+def test_bloom_fp_rate_and_ref_equivalence(rng):
+    keys = rng.choice(2**31, 5000, replace=False).astype(np.uint32)
+    nbits = -(-5000 * 10 // (32 * 128)) * 32 * 128
+    words = ops.bloom_build(jnp.array(keys), nbits)
+    neg = rng.integers(2**31, 2**32 - 2, 4000).astype(np.uint32)
+    probe = np.array(ops.bloom_probe(words, jnp.array(neg), nbits=nbits))
+    assert probe.mean() < 0.05, f"FP rate {probe.mean()}"
+    rp = np.array(ref.bloom_probe_ref(words, jnp.array(neg), nbits))
+    assert np.array_equal(probe.astype(bool), rp)
+
+
+# --------------------------------------------------------- paged attention
+@pytest.mark.parametrize("B,KVH,G,D,S,MP", [
+    (2, 1, 8, 128, 16, 4), (4, 2, 8, 128, 16, 6),
+    (1, 4, 4, 64, 8, 3), (3, 2, 16, 256, 32, 2),
+])
+def test_paged_attention_matches_ref(rng, B, KVH, G, D, S, MP):
+    P = MP * 4
+    q = jnp.array(rng.normal(size=(B, KVH, G, D)), jnp.float32)
+    kp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.float32)
+    vp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.float32)
+    bt = jnp.array(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.array(rng.integers(1, MP * S + 1, (B,)), jnp.int32)
+    out = ops.paged_attention(q, kp, vp, bt, lens)
+    rout = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.array(out), np.array(rout), atol=3e-5, rtol=3e-5)
+
+
+def test_paged_attention_bf16(rng):
+    B, KVH, G, D, S, MP, P = 2, 2, 4, 128, 16, 4, 16
+    q = jnp.array(rng.normal(size=(B, KVH, G, D)), jnp.bfloat16)
+    kp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.bfloat16)
+    vp = jnp.array(rng.normal(size=(KVH, P, S, D)), jnp.bfloat16)
+    bt = jnp.array(rng.integers(0, P, (B, MP)), jnp.int32)
+    lens = jnp.array([64, 17], jnp.int32)
+    out = ops.paged_attention(q, kp, vp, bt, lens)
+    rout = ref.paged_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.array(out, np.float32), np.array(rout, np.float32),
+                               atol=3e-2, rtol=3e-2)

@@ -1,0 +1,114 @@
+"""Paper-faithful NB-tree (core/refimpl): behaviour + invariants + claims."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import SSD, CostModel
+from repro.core.refimpl import NBTree
+
+
+def _unique_keys(rng, n, hi=10_000_000):
+    return rng.choice(np.arange(1, hi, dtype=np.uint64), size=n, replace=False)
+
+
+@pytest.mark.parametrize("f,sigma", [(3, 256), (4, 512), (8, 128)])
+def test_insert_query_roundtrip(rng, f, sigma):
+    keys = _unique_keys(rng, 5000)
+    nb = NBTree(f=f, sigma=sigma)
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+    nb.drain()
+    nb.check_invariants()
+    for i in [0, 1, 17, 999, 2500, 4999]:
+        assert nb.get(keys[i]) == i
+    # negatives
+    for k in rng.integers(10_000_001, 2**63, 100).astype(np.uint64):
+        assert nb.get(k) is None
+
+
+def test_delete_update_delta_records(rng):
+    keys = _unique_keys(rng, 3000)
+    nb = NBTree(f=3, sigma=256)
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+    for k in keys[:100]:
+        nb.delete(k)
+    for k in keys[100:200]:
+        nb.update(k, 777)
+    nb.drain()
+    nb.check_invariants()
+    assert all(nb.get(k) is None for k in keys[:100])
+    assert all(nb.get(k) == 777 for k in keys[100:200])
+    assert nb.get(keys[500]) == 500
+
+
+def test_duplicate_insert_newest_wins(rng):
+    nb = NBTree(f=3, sigma=128)
+    keys = _unique_keys(rng, 1000)
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+    for i, k in enumerate(keys[:300]):
+        nb.insert(k, 10_000 + i)
+    nb.drain()
+    assert all(nb.get(k) == 10_000 + i for i, k in enumerate(keys[:300]))
+
+
+def test_height_logarithmic(rng):
+    sigma, f = 128, 3
+    nb = NBTree(f=f, sigma=sigma)
+    n = 20_000
+    for i, k in enumerate(_unique_keys(rng, n)):
+        nb.insert(k, i)
+    nb.drain()
+    # height <= c * log_f(n / sigma) with a small constant
+    import math
+    bound = math.log(n / sigma, f) + 3
+    assert nb.height <= bound, (nb.height, bound)
+
+
+def test_deamortized_worst_case_vs_basic(rng):
+    """The paper's core claim (Fig. 7): deamortized max insertion time is
+    orders of magnitude below the basic (synchronous-cascade) version."""
+    keys = _unique_keys(rng, 30_000)
+    t_de = [NBTree(f=3, sigma=1024).insert(0, 0)]  # warm shape
+    nb1 = NBTree(f=3, sigma=1024, deamortize=True)
+    t1 = [nb1.insert(k, i) for i, k in enumerate(keys)]
+    nb2 = NBTree(f=3, sigma=1024, deamortize=False)
+    t2 = [nb2.insert(k, i) for i, k in enumerate(keys)]
+    assert max(t1) * 50 < max(t2), (max(t1), max(t2))
+
+
+def test_bloom_reduces_query_cost(rng):
+    keys = _unique_keys(rng, 20_000)
+    q = rng.choice(keys, 500, replace=False)
+
+    def avg_q(use_bloom):
+        nb = NBTree(f=3, sigma=512, use_bloom=use_bloom)
+        for i, k in enumerate(keys):
+            nb.insert(k, i)
+        nb.drain()
+        return np.mean([nb.query(k)[1] for k in q])
+
+    with_bloom, without = avg_q(True), avg_q(False)
+    assert with_bloom < without, (with_bloom, without)
+
+
+def test_ssd_faster_than_hdd(rng):
+    keys = _unique_keys(rng, 10_000)
+    times = {}
+    for dev in ("hdd", "ssd"):
+        from repro.core.cost_model import HDD, SSD
+        nb = NBTree(f=3, sigma=512, device=HDD if dev == "hdd" else SSD)
+        for i, k in enumerate(keys):
+            nb.insert(k, i)
+        nb.drain()
+        times[dev] = nb.cm.time
+    assert times["ssd"] < times["hdd"]
+
+
+def test_conservation(rng):
+    keys = _unique_keys(rng, 8000)
+    nb = NBTree(f=4, sigma=256)
+    for i, k in enumerate(keys):
+        nb.insert(k, i)
+    nb.drain()
+    assert nb.total_pairs() == len(keys)

@@ -1,0 +1,82 @@
+"""Serving stack: paged KV cache + NB-tree block index + engine equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models import transformer as T
+from repro.serve.engine import Engine, Request
+from repro.serve.kv_cache import MAX_BLOCKS_PER_SEQ, PagedKVCache, pack_key
+
+
+def test_pack_key_roundtrip():
+    keys = pack_key(np.asarray([0, 5, 1000]), np.asarray([0, 7, 123]))
+    assert keys.dtype == np.uint32
+    assert len(set(keys.tolist())) == 3
+
+
+def test_kv_cache_alloc_free_cycle():
+    c = PagedKVCache(n_layers=2, n_kv_heads=2, head_dim=16, n_pages=32,
+                     page_size=4, dtype=jnp.float32)
+    free0 = len(c.free)
+    c.add_sequence(1)
+    c.extend(1, 10)                  # 3 pages
+    c.add_sequence(2)
+    c.extend(2, 4)                   # 1 page
+    assert len(c.free) == free0 - 4
+    t = np.asarray(c.block_tables([1, 2], 3))
+    assert (t[0] > 0).sum() == 3 and (t[1] > 0).sum() == 1
+    c.free_sequence(1)
+    c.maintain(8)
+    assert len(c.free) == free0 - 1
+    c.free_sequence(2)
+    assert len(c.free) == free0
+
+
+def test_kv_cache_write_read():
+    c = PagedKVCache(n_layers=1, n_kv_heads=2, head_dim=8, n_pages=16,
+                     page_size=4, dtype=jnp.float32)
+    c.add_sequence(0)
+    c.extend(0, 6)
+    k = jnp.arange(2 * 8, dtype=jnp.float32).reshape(1, 2, 8)
+    c.write_token(0, [0], [5], k, k * 2)
+    kp, vp = c.layer_pages(0)
+    table = np.asarray(c.block_tables([0], 2))
+    page, slot = table[0, 5 // 4], 5 % 4
+    np.testing.assert_allclose(np.asarray(kp)[:, page, slot], np.asarray(k)[0])
+    np.testing.assert_allclose(np.asarray(vp)[:, page, slot], np.asarray(k)[0] * 2)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(registry.get_config("qwen3-8b").reduced(),
+                              dtype="float32", remat="none")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_matches_contiguous_decode(served):
+    cfg, params = served
+    prompt = list(range(1, 9))
+    # reference: contiguous cache decode
+    cache = T.init_cache(cfg, 1, 64)
+    for i, t in enumerate(prompt):
+        lg, cache = T.decode_step(params, cfg, jnp.asarray([t], jnp.int32),
+                                  cache, jnp.int32(i))
+    ref = [int(jnp.argmax(lg[0]))]
+    for s in range(4):
+        lg, cache = T.decode_step(params, cfg,
+                                  jnp.asarray([ref[-1]], jnp.int32), cache,
+                                  jnp.int32(len(prompt) + s))
+        ref.append(int(jnp.argmax(lg[0])))
+
+    eng = Engine(cfg, params, max_batch=2, n_pages=128, page_size=8)
+    reqs = [Request(0, prompt, max_new_tokens=5),
+            Request(1, prompt, max_new_tokens=5)]
+    out = eng.run(reqs)
+    assert out[0].out == ref, (out[0].out, ref)
+    assert out[1].out == ref
+    assert len(eng.cache.free) == 127      # all pages reclaimed (page 0 reserved)

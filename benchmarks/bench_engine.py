@@ -25,6 +25,7 @@ def run(n_steps: int = 110, batch: int = 64, warmup: int = 140):
     # the structural paths don't pollute the steady-state tail.
     rng = np.random.default_rng(0)
     rows = []
+    range_idx = None
     for mode in ("deamortized", "eager"):
         idx = NBTreeIndex(f=4, sigma=2048, max_nodes=512)
         key_src = iter(rng.choice(np.arange(1, 2**31, dtype=np.uint32),
@@ -46,6 +47,29 @@ def run(n_steps: int = 110, batch: int = 64, warmup: int = 140):
                          p50_ms=float(np.percentile(times, 50)),
                          p99_ms=float(np.percentile(times, 99)),
                          p100_ms=float(times.max())))
+        if mode == "deamortized":
+            range_idx = idx
+
+    # ---- range scans on the loaded index (selectivity sweep) ---------------
+    # keys above were drawn uniformly from [1, 2^31); a span of s * 2^31
+    # therefore matches ~s of the live pairs.
+    range_idx.drain()
+    for s in (0.001, 0.01):
+        span = int((2**31) * s)
+        lo = rng.integers(1, 2**31 - span, 32).astype(np.uint32)
+        hi = (lo + span).astype(np.uint32)
+        range_idx.range_query_batch(lo, hi, max_results=1024)  # compile/warm
+        times = []
+        for _ in range(7):
+            t0 = time.perf_counter()
+            out = range_idx.range_query_batch(lo, hi, max_results=1024)
+            out[0].block_until_ready()
+            times.append(time.perf_counter() - t0)
+        times = np.asarray(times) * 1e3
+        rows.append(dict(name=f"engine_range_b32_sel{s:g}",
+                         p50_ms=float(np.percentile(times, 50)),
+                         p99_ms=float(np.percentile(times, 99)),
+                         p100_ms=float(times.max())))
     return rows
 
 
@@ -53,5 +77,10 @@ def check(rows):
     de = next(r for r in rows if "deamortized" in r["name"])
     ea = next(r for r in rows if "eager" in r["name"])
     tag = "matches paper" if de["p100_ms"] < ea["p100_ms"] else "MISMATCH"
-    return [f"engine: bounded-budget worst step {de['p100_ms']:.0f}ms vs eager "
-            f"cascade {ea['p100_ms']:.0f}ms  [{tag}]"]
+    out = [f"engine: bounded-budget worst step {de['p100_ms']:.0f}ms vs eager "
+           f"cascade {ea['p100_ms']:.0f}ms  [{tag}]"]
+    for r in rows:
+        if "range" in r["name"]:
+            out.append(f"engine: {r['name']} p50={r['p50_ms']:.1f}ms "
+                       f"(batched fused descent)")
+    return out

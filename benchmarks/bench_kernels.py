@@ -36,6 +36,14 @@ def run():
     rows.append(dict(name="sorted_search_16k_q4k",
                      us_per_call=_time(ops.sorted_search, ak, av, q),
                      ref_us=_time(jax.jit(ref.sorted_search_ref), ak, av, q)))
+    span = jnp.uint32(2**31 // 64)                     # ~1.5% selectivity
+    lo = jnp.array(rng.integers(1, 2**31 - int(span), 512).astype(np.uint32))
+    hi = lo + span
+    rs = lambda a, b, c, d: ops.range_scan(a, b, c, d, max_results=256)
+    rs_ref = jax.jit(lambda a, b, c, d: ref.range_scan_ref(a, b, c, d, 256))
+    rows.append(dict(name="range_scan_16k_q512",
+                     us_per_call=_time(rs, ak, av, lo, hi),
+                     ref_us=_time(rs_ref, ak, av, lo, hi)))
     nbits = -(-n * 10 // (32 * 128)) * 32 * 128
     words = ops.bloom_build(ak, nbits)
     rows.append(dict(name="bloom_probe_4k",

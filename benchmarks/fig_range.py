@@ -1,0 +1,87 @@
+"""Range-scan scenario: simulated cost vs selectivity (0.01% → 10%).
+
+Not a paper figure — the paper evaluates point queries only (Figs. 8-9) —
+but its LSM baselines (Luo & Carey) are judged on range scans as much as
+point lookups, so this scenario extends the harness to that workload class.
+Expected shape: the bulk B+-tree is the floor (one descent + one sequential
+span); the NB-tree pays one extra span per s-tree level the range
+intersects; leveling LSM pays one span per *level*, and none of the three
+can use Bloom filters.  Every index also cross-checks the others: they must
+return identical hit counts for the same ranges (differential correctness
+at benchmark scale).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.btree import BPlusTreeBulk
+
+from .common import DEVICES, make_index, scaled_device, workload
+
+#: keys are drawn uniformly from [1, 2^48) (see common.workload).
+KEYSPACE = 1 << 48
+SELECTIVITIES = (1e-4, 1e-3, 1e-2, 1e-1)
+INDICES = ("nbtree", "lsm", "blsm")
+
+
+def run(sizes=(40_000,), n_q: int = 16, seed: int = 2):
+    rows = []
+    for dev_name, dev in DEVICES.items():
+        for n in sizes:
+            keys = workload(n)
+            sigma = max(1024, n // 64)
+            built = []
+            for name in INDICES:
+                idx = make_index(name, dev, sigma)
+                for i, k in enumerate(keys):
+                    idx.insert(k, i)
+                idx.drain()
+                built.append((name, idx))
+            built.append(("btree-bulk",
+                          BPlusTreeBulk(keys, np.arange(n, dtype=np.int64),
+                                        device=scaled_device(dev, sigma))))
+            rng = np.random.default_rng(seed)
+            for s in SELECTIVITIES:
+                span = max(1, int(KEYSPACE * s))
+                los = rng.integers(1, KEYSPACE - span, n_q).astype(np.uint64)
+                his = (los + np.uint64(span)).astype(np.uint64)
+                for name, idx in built:
+                    times, hits = [], 0
+                    for lo, hi in zip(los, his):
+                        rk, _ = idx.range_query(lo, hi)
+                        times.append(idx._last_query_time)
+                        hits += len(rk)
+                    rows.append(dict(fig="range", device=dev_name, n=n,
+                                     index=name, selectivity=s,
+                                     avg_range_ms=float(np.mean(times)) * 1e3,
+                                     avg_hits=hits / n_q))
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    big = max(r["n"] for r in rows)
+    for dev in DEVICES:
+        sel_rows = [r for r in rows if r["n"] == big and r["device"] == dev]
+        # differential: all indexes must return identical hit counts.
+        agree = all(
+            len({r["avg_hits"] for r in sel_rows if r["selectivity"] == s}) == 1
+            for s in SELECTIVITIES)
+        tag = "matches paper" if agree else "MISMATCH"
+        out.append(f"range {dev}: all indexes agree on hits across "
+                   f"selectivities  [{tag}]")
+        top = max(SELECTIVITIES)
+        by = {r["index"]: r for r in sel_rows if r["selectivity"] == top}
+        nb, bulk, lsm = by["nbtree"], by["btree-bulk"], by["lsm"]
+        if nb["avg_range_ms"] < 5.0 * bulk["avg_range_ms"]:
+            out.append(f"range {dev}: NB scan within 5x of bulk B+-tree "
+                       f"({nb['avg_range_ms']:.2f} vs "
+                       f"{bulk['avg_range_ms']:.2f} ms)  [matches paper]")
+        else:
+            out.append(f"range {dev}: NB scan {nb['avg_range_ms']:.2f}ms vs "
+                       f"bulk {bulk['avg_range_ms']:.2f}ms  [MISMATCH]")
+        if nb["avg_range_ms"] <= 1.5 * lsm["avg_range_ms"]:
+            out.append(f"range {dev}: NB scan <= 1.5x LSM "
+                       f"({nb['avg_range_ms']:.2f} vs "
+                       f"{lsm['avg_range_ms']:.2f} ms)  [matches paper]")
+    return out

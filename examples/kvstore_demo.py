@@ -32,3 +32,19 @@ lsmq = np.mean([lsm.query(k)[1] for k in q])
 btq = np.mean([bulk.query(k)[1] for k in q])
 print(f"avg query    : NB {nbq*1e3:6.2f} ms | LSM {lsmq*1e3:6.2f} ms | "
       f"B+bulk {btq*1e3:6.2f} ms   (Fig. 8)")
+
+# range scans (1% selectivity): every index serves the same inclusive API.
+span = np.uint64((1 << 40) // 100)
+los = rng.integers(1, (1 << 40) - int(span), 30).astype(np.uint64)
+res = {}
+for name, idx in (("NB", nb), ("LSM", lsm), ("B+bulk", bulk)):
+    t, hits = [], 0
+    for lo in los:
+        rk, _ = idx.range_query(lo, lo + span)
+        t.append(idx._last_query_time)
+        hits += len(rk)
+    res[name] = (np.mean(t), hits)
+assert len({h for _, h in res.values()}) == 1, "indexes disagree on range hits"
+print("range scan 1%: " + " | ".join(
+    f"{k} {v[0]*1e3:6.2f} ms" for k, v in res.items())
+    + f"   ({res['NB'][1] // len(los)} hits/query, all indexes agree)")

@@ -48,6 +48,21 @@ class BPlusTreeBulk:
         v = self.get(key)
         return v, self._last_query_time
 
+    def range_query(self, lo, hi):
+        """Inclusive range scan [lo, hi]: one descent + one sequential leaf
+        scan of the matching span — the optimal disk range query every other
+        index is measured against.  Returns (keys, vals) numpy arrays."""
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        with self.cm.measure() as t:
+            i0 = int(np.searchsorted(self.keys, lo, side="left"))
+            i1 = int(np.searchsorted(self.keys, hi, side="right"))
+            self.cm.page_read()                  # locate the first leaf
+            if i1 > i0:
+                self.cm.read_pairs(i1 - i0)      # sequential span scan
+            out = self.keys[i0:i1].copy(), self.vals[i0:i1].copy()
+        self._last_query_time = t.seconds
+        return out
+
 
 class BPlusTree:
     """Incremental B+-tree: per-insert leaf read-modify-write.
@@ -85,6 +100,22 @@ class BPlusTree:
     def query(self, key):
         v = self.get(key)
         return v, self._last_query_time
+
+    def range_query(self, lo, hi):
+        """Inclusive range scan [lo, hi]: descent + sequential leaf-chain
+        scan (leaves are sibling-linked).  Returns (keys, vals) arrays."""
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        with self.cm.measure() as t:
+            ks = sorted(int(k) for k, v in self._store.items()
+                        if lo <= k <= hi and v != TOMBSTONE)
+            self.cm.page_read()                  # locate the first leaf
+            if ks:
+                self.cm.read_pairs(len(ks))      # sequential leaf-chain scan
+            out = (np.asarray(ks, KEY_DTYPE),
+                   np.asarray([int(self._store[np.uint64(k)]) for k in ks],
+                              VAL_DTYPE))
+        self._last_query_time = t.seconds
+        return out
 
     def drain(self) -> None:
         pass

@@ -16,6 +16,24 @@ kernels:
                         1/sigma-per-insert deamortization (no allocator or
                         compaction stall can exceed the per-step budget).
 
+Range queries (DESIGN.md §4): ``range_query_batch(lo, hi, max_results)``
+serves inclusive scans ``[lo, hi]`` with the same host/device split as point
+lookups.  The *host control plane* routes each query over its pivot
+structure, collecting — in pre-order, so ancestors (fresher data) come
+first — the ids of every node whose key interval intersects the range; the
+*device data plane* then runs one fused jitted pass that (a) lower/upper
+bound binary-searches every candidate run in lockstep, (b) gathers the
+matching spans into a fixed-capacity candidate tile, (c) resolves per-key
+freshness by a single stable sort over the level-major candidates (the
+range generalization of the point lookup's first-hit-wins rule: for
+duplicate keys, the copy from the shallower level — or leftmost in-run
+position — survives), (d) filters ``TOMBSTONE32`` delta-deletes, and (e)
+returns sorted, KEY_MAX-padded results with a live count and a truncation
+flag.  Bloom filters are not consulted: they cannot answer range
+predicates.  The standalone ``ops.range_scan`` Pallas kernel implements the
+same search+gather step for single-run scans (LSM-style baselines,
+microbenchmarks).
+
 Static-shape adaptations vs. the paper (recorded in DESIGN.md §2): runs are
 fixed-capacity rows of a node table (RUN_CAP >= f*(sigma+1) + sigma, the
 paper's Sec. 5.1 sibling bound plus one incoming flush); device rows are
@@ -97,8 +115,17 @@ def _build_bloom(keys, nbits: int, h: int):
 
 @functools.partial(jax.jit, static_argnames=("cap",))
 def _compact_tombstones(keys, vals, cap: int):
-    """Drop delta-delete records (leaf-level resolution, Sec. 3.2.2)."""
-    dead = vals == TOMBSTONE32
+    """Leaf-level delta resolution (Sec. 3.2.2): dedup then drop deletes.
+
+    The merge kernel keeps duplicate keys (newest copy leftmost — that is
+    what makes leftmost-match point lookups see the freshest record), so a
+    leaf run accumulates stale copies.  Compaction must retire the stale
+    duplicates *together with* the tombstone records: dropping only the
+    tombstone would resurrect the older copy it deleted.
+    """
+    first = jnp.concatenate(
+        [jnp.ones(1, bool), keys[1:] != keys[:-1]])   # leftmost = freshest
+    dead = ~first | (vals == TOMBSTONE32)
     keys = jnp.where(dead, jnp.uint32(KEY_MAX32), keys)
     order = jnp.argsort(keys, stable=True)
     keys, vals = keys[order], vals[order]
@@ -145,6 +172,63 @@ def _query_batch_impl(pivots, nchild, children, run_keys, run_vals, run_count,
         node = jnp.where(nchild[node] > 0, child, node)
     present = found & (out != TOMBSTONE32)
     return present, out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "max_results", "run_cap", "steps"))
+def _range_query_batch_impl(run_keys, run_vals, run_count, nodes, lo, hi, *,
+                            cap, max_results, run_cap, steps):
+    B, M = nodes.shape
+    valid_node = nodes >= 0                      # (B, M), -1 = padding
+    nid = jnp.maximum(nodes, 0)
+    cnt = jnp.where(valid_node, run_count[nid], 0)
+    lo_b, hi_b = lo[:, None], hi[:, None]
+
+    # ---- lockstep lower/upper bound over every candidate run --------------
+    def bound(q, closed):
+        l = jnp.zeros((B, M), jnp.int32)
+        h = cnt                                  # excludes KEY_MAX padding
+        for _ in range(steps):
+            mid = (l + h) >> 1
+            key = run_keys[nid, jnp.clip(mid, 0, run_cap - 1)]
+            go = (l < h) & ((key <= q) if closed else (key < q))
+            l = jnp.where(go, mid + 1, l)
+            h = jnp.where(go, h, mid)
+        return l
+
+    start = bound(lo_b, False)
+    end = bound(hi_b, True)
+    n_match = jnp.maximum(end - start, 0)        # per-node matches (pre-cap)
+
+    # ---- masked gather of each matching span ------------------------------
+    idx = start[..., None] + jnp.arange(cap, dtype=jnp.int32)   # (B, M, cap)
+    valid = idx < end[..., None]
+    safe = jnp.clip(idx, 0, run_cap - 1)
+    gk = run_keys[nid[..., None], safe]
+    gv = run_vals[nid[..., None], safe]
+    ck = jnp.where(valid, gk, jnp.uint32(KEY_MAX32)).reshape(B, M * cap)
+    cv = jnp.where(valid, gv, 0).reshape(B, M * cap)
+
+    # ---- freshness resolution ---------------------------------------------
+    # Candidates are level-major with m ordered pre-order (ancestors first)
+    # and in-run position order within m (newer duplicate copies first, the
+    # merge kernel's tie-break), so a *stable* sort by key puts the freshest
+    # copy of every key first — the range generalization of first-hit-wins.
+    order = jnp.argsort(ck, axis=1, stable=True)
+    sk = jnp.take_along_axis(ck, order, axis=1)
+    sv = jnp.take_along_axis(cv, order, axis=1)
+    fresh = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sk[:, 1:] != sk[:, :-1]], axis=1)
+    live = fresh & (sk != KEY_MAX32) & (sv != TOMBSTONE32)
+    sk = jnp.where(live, sk, jnp.uint32(KEY_MAX32))
+    sv = jnp.where(live, sv, 0)
+    order2 = jnp.argsort(sk, axis=1, stable=True)
+    sk = jnp.take_along_axis(sk, order2, axis=1)
+    sv = jnp.take_along_axis(sv, order2, axis=1)
+    total = jnp.sum(live.astype(jnp.int32), axis=1)
+    truncated = (total > max_results) | jnp.any(n_match > cap, axis=1)
+    return (sk[:, :max_results], sv[:, :max_results],
+            jnp.minimum(total, max_results), truncated)
 
 
 class NBTreeIndex:
@@ -225,6 +309,58 @@ class NBTreeIndex:
             f=self.f, levels=self.max_levels, run_cap=self.run_cap,
             nbits=self.nbits, h=self.h, steps=self._steps)
 
+    def range_query_batch(self, lo, hi, max_results: int = 256):
+        """Batched inclusive range scan [lo_b, hi_b] — one fused device call.
+
+        Returns ``(keys uint32 (B, max_results), vals int32 (B, max_results),
+        count int32 (B,), truncated bool (B,))``: per query the up-to-
+        ``max_results`` freshest live pairs in the range, sorted by key and
+        KEY_MAX-padded; ``count`` is the number of valid slots; ``truncated``
+        flags queries whose full result did not fit (re-issue with a larger
+        ``max_results`` for exact results).  ``lo > hi`` is an empty range.
+
+        The host control plane routes each query to the nodes whose key
+        interval intersects it (pre-order, ancestors first — see module
+        docstring); the device pass searches, gathers, freshness-resolves
+        and tombstone-filters in one jitted call.  Recompiles per distinct
+        (B, routed-node-count-bucket, max_results) combination; the node
+        bucket is padded to a power of two to bound recompiles.
+        """
+        lo = np.asarray(lo, np.uint32)
+        hi = np.asarray(hi, np.uint32)
+        assert lo.shape == hi.shape and lo.ndim == 1
+        B = lo.shape[0]
+        routes = [self._route_range(int(l), int(h)) for l, h in zip(lo, hi)]
+        M = max(1, *(len(r) for r in routes)) if routes else 1
+        M = 1 << (M - 1).bit_length()
+        nodes = np.full((B, M), -1, np.int32)
+        for b, r in enumerate(routes):
+            nodes[b, : len(r)] = r
+        return _range_query_batch_impl(
+            self.run_keys, self.run_vals, self.run_count,
+            jnp.asarray(nodes), jnp.asarray(lo), jnp.asarray(hi),
+            cap=int(max_results), max_results=int(max_results),
+            run_cap=self.run_cap, steps=self._steps)
+
+    def _route_range(self, lo: int, hi: int) -> list[int]:
+        """Pre-order ids of nodes whose key interval intersects [lo, hi]."""
+        if lo > hi:
+            return []
+        out: list[int] = []
+
+        def rec(node, nlo, nhi):
+            out.append(node.nid)
+            if node.is_leaf:
+                return
+            bounds = [nlo, *node.skeys, nhi]
+            for i, c in enumerate(node.children):
+                clo, chi = bounds[i], bounds[i + 1]
+                if (chi is None or lo < chi) and (clo is None or hi >= clo):
+                    rec(c, clo, chi)
+
+        rec(self.root, None, None)
+        return out
+
     def maintain(self, max_units: int = 1) -> int:
         """Run up to ``max_units`` flush/split units; returns pending count.
 
@@ -290,6 +426,21 @@ class NBTreeIndex:
         nid = node.nid
         moved = min(node.count, self.sigma)
         row_k, row_v = self.run_keys[nid], self.run_vals[nid]
+        if moved < node.count:
+            # Never split a duplicate group across the moved boundary: runs
+            # keep duplicate copies newest-first, so flushing the fresh copy
+            # while the stale one stays behind would invert the
+            # ancestors-are-fresher rule both query paths rely on.  Back the
+            # cut up to the group start; if the whole prefix is one key,
+            # move the entire group (progress is guaranteed, and the child
+            # run has sigma headroom — RUN_CAP >= f*(sigma+1) + sigma).
+            k_cut = jnp.uint32(int(row_k[moved]))
+            left = int(jnp.searchsorted(row_k, k_cut, side="left"))
+            if left > 0:
+                moved = min(left, moved)
+            else:
+                moved = min(int(jnp.searchsorted(row_k, k_cut, side="right")),
+                            node.count)
         piv = jnp.asarray([int(k) for k in node.skeys], jnp.uint32)
         cuts = jnp.minimum(jnp.searchsorted(row_k, piv, side="left"), moved)
         cuts = np.asarray(cuts)                          # host ints, f-1 of them

@@ -141,6 +141,42 @@ class LSMTree:
                     return None if v == TOMBSTONE else v
         return None
 
+    def range_query(self, lo, hi):
+        """Inclusive range scan [lo, hi]; returns (keys, vals) numpy arrays.
+
+        Every level must be scanned (newest first — freshest copy wins, the
+        LSM range-query sort-merge): per non-empty overlapping level one
+        seek + the sequential transfer of its matching span.  Fence pointers
+        are cached in memory, so levels with no overlap cost nothing.
+        Bloom filters cannot prune range scans — the LSM read amplification
+        the paper's baselines pay on this workload class.
+        """
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        with self.cm.measure() as t:
+            result: dict = {}
+            if lo <= hi:
+                for k, v in self._buf.items():      # keys unique: no order dep
+                    if lo <= k <= hi:
+                        result[int(k)] = int(v)
+                for lvl in self.levels:          # level 0 first = newest
+                    if len(lvl) == 0:
+                        continue
+                    i0 = int(np.searchsorted(lvl.keys, lo, side="left"))
+                    i1 = int(np.searchsorted(lvl.keys, hi, side="right"))
+                    if i1 <= i0:
+                        continue
+                    self.cm.seek()
+                    self.cm.read_pairs(i1 - i0)
+                    for k, v in zip(lvl.keys[i0:i1].tolist(),
+                                    lvl.vals[i0:i1].tolist()):
+                        if k not in result:
+                            result[k] = v
+            ks = sorted(k for k, v in result.items() if v != TOMBSTONE)
+            out = (np.asarray(ks, KEY_DTYPE),
+                   np.asarray([result[k] for k in ks], VAL_DTYPE))
+        self._last_query_time = t.seconds
+        return out
+
     def drain(self) -> None:  # API parity with NBTree
         pass
 

@@ -142,6 +142,61 @@ class NBTree:
         """Finish all pending deamortized work (for tests/shutdown)."""
         self._drain_cascade()
 
+    def range_query(self, lo, hi):
+        """Inclusive range scan [lo, hi]; returns (keys, vals) numpy arrays.
+
+        Visits every s-node whose key interval intersects the range
+        (pre-order, so ancestors — fresher data — resolve duplicates first),
+        scans each visited d-tree's matching span sequentially, then merges
+        with freshest-copy-wins and drops tombstones.  Cost accounting per
+        visited node with data: one seek + one leaf-locate page + the
+        sequential transfer of the matching span (internal d-nodes are
+        cached in memory, as for point queries).  Bloom filters are not
+        consulted — they cannot answer range predicates.  ``lo > hi`` is an
+        empty range.
+        """
+        lo, hi = np.uint64(lo), np.uint64(hi)
+        with self.cm.measure() as t:
+            out = self._range_query(lo, hi)
+        self._last_query_time = t.seconds
+        return out
+
+    def _range_query(self, lo, hi):
+        result: dict = {}
+
+        def add(ks, vs):
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                if k not in result:
+                    result[k] = v
+
+        if lo <= hi:
+            # 1. live buffer, then frozen buffer (in memory, newest first).
+            for k, v in self._buf.items():          # keys unique: no order dep
+                if lo <= k <= hi:
+                    result[int(k)] = int(v)
+            if self._frozen is not None:
+                add(*self._frozen.range(lo, hi))
+
+            # 2. pre-order walk of the intersecting s-nodes.
+            def rec(node):
+                if node is not self.root and len(node.run) > 0:
+                    rk, rv = node.run.range(lo, hi)
+                    self.cm.page_read()          # locate the first leaf
+                    self.cm.read_pairs(len(rk))  # sequential span scan
+                    add(rk, rv)
+                if node.is_leaf:
+                    return
+                bounds = [None, *node.skeys, None]
+                for i, c in enumerate(node.children):
+                    clo, chi = bounds[i], bounds[i + 1]
+                    if (chi is None or lo < chi) and (clo is None or hi >= clo):
+                        rec(c)
+
+            rec(self.root)
+        ks = sorted(k for k, v in result.items() if v != TOMBSTONE)
+        return (np.asarray(ks, KEY_DTYPE),
+                np.asarray([result[k] for k in ks], VAL_DTYPE))
+
     # ----------------------------------------------------------------- queries
     def _get(self, key):
         # 1. live buffer, then frozen buffer (both in memory, newest first).

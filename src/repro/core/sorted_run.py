@@ -65,6 +65,19 @@ class Run:
             return self.live_vals[i]
         return None
 
+    def range(self, lo, hi):
+        """Live pairs with lo <= key <= hi (inclusive), in key order.
+
+        ``lo > hi`` is an empty range.  Returns (keys, vals) copies — the
+        sequential leaf scan between the two d-tree descents.
+        """
+        k = self.live_keys
+        i0 = int(np.searchsorted(k, lo, side="left"))
+        i1 = int(np.searchsorted(k, hi, side="right"))
+        if i1 <= i0:
+            return np.empty(0, KEY_DTYPE), np.empty(0, VAL_DTYPE)
+        return k[i0:i1].copy(), self.live_vals[i0:i1].copy()
+
 
 def merge_runs(a_keys, a_vals, b_keys, b_vals):
     """Merge two sorted (keys, vals) streams; on duplicate keys *a wins*.

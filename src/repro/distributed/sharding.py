@@ -17,6 +17,8 @@ import re
 
 import jax
 import numpy as np
+
+from ..launch.mesh import current_mesh
 from jax.sharding import PartitionSpec as P
 
 #: logical -> physical for activations (tuples = joint axes, e.g. the
@@ -33,8 +35,29 @@ ACT_RULES = {
 }
 
 
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool | None = None):
+    """``jax.shard_map`` on current jax; ``jax.experimental.shard_map`` with
+    the equivalent ``auto``/``check_rep`` spelling on 0.4.x.
+
+    ``axis_names`` is the set of *manual* axes (None = all of them), as in
+    the new API; on 0.4.x it is translated to the complement ``auto`` set.
+    ``check_vma=None`` keeps each API's own default.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=axis_names, **kw)
+    from jax.experimental.shard_map import shard_map as sm_old
+    auto = frozenset(mesh.axis_names) - set(axis_names or mesh.axis_names)
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  auto=auto, **kw)
+
+
 def mesh_axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty or name not in mesh.shape:
         return 1
     return mesh.shape[name]
@@ -42,14 +65,16 @@ def mesh_axis_size(name: str) -> int:
 
 def constrain(x, *logical):
     """with_sharding_constraint by logical axis names; no-op without a mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh is None or mesh.empty:
         return x
     # Inside a partial-manual shard_map (the compressed-gradient pod loop)
     # activation constraints are dropped entirely: mixing them with manual
     # axes trips an XLA SPMD-partitioner CHECK (spmd_partitioner_util.cc:504,
     # jaxlib 0.8.2); GSPMD still propagates sharding from the in/out specs.
-    if any(t == jax.sharding.AxisType.Manual for t in mesh.axis_types):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and any(
+            t == axis_type.Manual for t in getattr(mesh, "axis_types", ())):
         return x
     manual = set()
     spec = []
@@ -151,7 +176,7 @@ def param_specs(params, mesh=None):
     divide the tensor is used, otherwise non-dividing axes of the best
     candidate are dropped (tiny smoke configs on big meshes).
     """
-    mesh = mesh or jax.sharding.get_abstract_mesh()
+    mesh = mesh or current_mesh()
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
 
     def path_str(kp):

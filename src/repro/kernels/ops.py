@@ -12,6 +12,7 @@ import jax
 from .bloom_filter import bloom_probe as _bloom_probe
 from .merge_sorted import merge_sorted as _merge_sorted
 from .paged_attention import paged_attention as _paged_attention
+from .range_scan import range_scan as _range_scan
 from .ref import bloom_build_ref
 from .sorted_search import sorted_search as _sorted_search
 
@@ -26,6 +27,11 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals):
 
 def sorted_search(run_keys, run_vals, queries):
     return _sorted_search(run_keys, run_vals, queries, interpret=_interpret())
+
+
+def range_scan(run_keys, run_vals, lo, hi, *, max_results: int = 128):
+    return _range_scan(run_keys, run_vals, lo, hi, max_results=max_results,
+                       interpret=_interpret())
 
 
 def bloom_probe(words, queries, *, nbits: int, h: int = 3):

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: batched range scan of a sorted run (range-query hot loop).
+
+Range analogue of ``sorted_search``: per query ``(lo, hi)`` the kernel runs a
+*lockstep* pair of binary searches over the VMEM-resident run — a lower bound
+for ``lo`` (leftmost index with ``run[i] >= lo``) and an upper bound for
+``hi`` (leftmost index with ``run[i] > hi``, i.e. the scan is inclusive on
+both ends) — then performs a masked gather of the matching span into a
+fixed-capacity output tile.  Both searches share the fori step counter, so
+the kernel has no data-dependent control flow; the gather is a clamped
+dynamic gather (tpu.DynamicGather), the only fast dynamic addressing mode
+VMEM offers.
+
+Overflow contract: the returned ``count`` is the *total* number of matching
+pairs, which may exceed the output capacity; callers detect truncation via
+``count > max_results`` and either re-issue with a larger tile or page
+through the run.  KEY_MAX padding keys are never returned (the upper bound is
+clamped to the live prefix), so ``hi = KEY_MAX - 1`` safely means "to the
+end of the run".
+
+Grid is over query tiles of SUBLANES queries; the run (keys + values) is
+fully VMEM-resident and reused across all grid steps (constant index map).
+Query blocks are (SUBLANES, 1) — lane-narrow, but the per-step output tile
+(SUBLANES, cap) keeps the VPU busy on the gather/mask phase.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KEY_MAX32
+
+LANES = 128
+SUBLANES = 8
+
+
+def _take(arr, idx):
+    return jnp.take(arr, idx, mode="clip")
+
+
+def _range_scan_kernel(run_keys_ref, run_vals_ref, lo_ref, hi_ref,
+                       keys_ref, vals_ref, count_ref, *, n: int, cap: int,
+                       steps: int):
+    run = run_keys_ref[...].reshape(-1)
+    vals = run_vals_ref[...].reshape(-1)
+    lo = lo_ref[...]                           # (SUBLANES, 1) uint32
+    hi = hi_ref[...]
+
+    # NB: the sentinel is materialized *inside* the kernel — pallas kernels
+    # may not capture module-level traced constants.
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    n_live = jnp.sum((run != sentinel).astype(jnp.int32))
+
+    def bound(q, closed: bool):
+        """Leftmost i with run[i] >= q (closed=False) or run[i] > q (True)."""
+        l = jnp.zeros(q.shape, jnp.int32)
+        h = jnp.full(q.shape, n, jnp.int32)
+        for _ in range(steps):
+            mid = (l + h) >> 1
+            probe = _take(run, jnp.clip(mid, 0, n - 1))
+            go = (l < h) & ((probe <= q) if closed else (probe < q))
+            l = jnp.where(go, mid + 1, l)
+            h = jnp.where(go, h, mid)
+        return l
+
+    start = bound(lo, False)
+    end = jnp.minimum(bound(hi, True), n_live)   # clamp: padding never matches
+    count = jnp.maximum(end - start, 0)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, cap), 1)
+    idx = start + col                            # (SUBLANES, cap)
+    valid = idx < end                            # empty when lo > hi
+    safe = jnp.clip(idx, 0, n - 1)
+    keys_ref[...] = jnp.where(valid, _take(run, safe), sentinel)
+    vals_ref[...] = jnp.where(valid, _take(vals, safe), 0)
+    count_ref[...] = count
+
+
+@functools.partial(jax.jit, static_argnames=("max_results", "interpret"))
+def range_scan(run_keys, run_vals, lo, hi, *, max_results: int = 128,
+               interpret: bool = True):
+    """Inclusive range scan ``[lo, hi]`` of ``queries`` over one sorted run.
+
+    Returns ``(keys uint32 (Q, max_results), vals int32 (Q, max_results),
+    count int32 (Q,))``: per query the first ``max_results`` matching pairs in
+    key order (KEY_MAX / 0 padded) and the *total* match count (may exceed
+    ``max_results`` — the truncation signal).  Q is padded to a SUBLANES
+    multiple internally and sliced back.
+    """
+    q_raw = lo.shape[0]
+    qn = max(SUBLANES, -(-q_raw // SUBLANES) * SUBLANES)
+    # pad queries with an empty range (lo=1 > hi=0) so pad lanes match nothing
+    lo = jnp.pad(lo, (0, qn - q_raw), constant_values=1)
+    hi = jnp.pad(hi, (0, qn - q_raw), constant_values=0)
+
+    n_raw = run_keys.shape[0]
+    n = max(LANES, -(-n_raw // LANES) * LANES)
+    run_keys = jnp.pad(run_keys, (0, n - n_raw), constant_values=KEY_MAX32)
+    run_vals = jnp.pad(run_vals, (0, n - n_raw), constant_values=0)
+
+    cap = max(LANES, -(-max_results // LANES) * LANES)
+    steps = math.ceil(math.log2(n + 1)) + 1
+    kernel = functools.partial(_range_scan_kernel, n=n, cap=cap, steps=steps)
+
+    run2 = run_keys.reshape(n // LANES, LANES)
+    vals2 = run_vals.reshape(n // LANES, LANES)
+    lo2 = lo.reshape(qn, 1)
+    hi2 = hi.reshape(qn, 1)
+
+    full = pl.BlockSpec((n // LANES, LANES), lambda t: (0, 0))
+    qspec = pl.BlockSpec((SUBLANES, 1), lambda t: (t, 0))
+    ospec = pl.BlockSpec((SUBLANES, cap), lambda t: (t, 0))
+    keys, vals, count = pl.pallas_call(
+        kernel,
+        grid=(qn // SUBLANES,),
+        in_specs=[full, full, qspec, qspec],
+        out_specs=[ospec, ospec, qspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, cap), jnp.uint32),
+            jax.ShapeDtypeStruct((qn, cap), jnp.int32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(run2, vals2, lo2, hi2)
+    return (keys[:q_raw, :max_results], vals[:q_raw, :max_results],
+            count[:q_raw, 0])

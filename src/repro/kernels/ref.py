@@ -51,6 +51,29 @@ def sorted_search_ref(run_keys, run_vals, queries):
     return found, vals, idx
 
 
+def range_scan_ref(run_keys, run_vals, lo, hi, max_results: int = 128):
+    """Inclusive range scan [lo, hi] of one sorted run (range_scan oracle).
+
+    Returns (keys uint32 (Q, max_results), vals int32 (Q, max_results),
+    count int32 (Q,)); ``count`` is the total number of matches and may
+    exceed ``max_results`` (the caller's truncation signal).  KEY_MAX
+    padding in the run never matches: the upper bound is clamped to the
+    live (non-sentinel) prefix.
+    """
+    n = run_keys.shape[0]
+    n_live = jnp.sum((run_keys != KEY_MAX32).astype(jnp.int32))
+    start = jnp.searchsorted(run_keys, lo, side="left").astype(jnp.int32)
+    end = jnp.minimum(
+        jnp.searchsorted(run_keys, hi, side="right").astype(jnp.int32), n_live)
+    count = jnp.maximum(end - start, 0)
+    idx = start[:, None] + jnp.arange(max_results, dtype=jnp.int32)
+    valid = idx < end[:, None]
+    safe = jnp.clip(idx, 0, n - 1)
+    keys = jnp.where(valid, run_keys[safe], KEY_MAX32)
+    vals = jnp.where(valid, run_vals[safe], 0)
+    return keys, vals, count
+
+
 def bloom_hash_ref(keys, h: int, nbits: int):
     """(h, N) bit positions via 32-bit multiply-xorshift mixing."""
     x = keys.astype(jnp.uint32)[None, :]

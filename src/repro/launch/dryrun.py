@@ -36,7 +36,7 @@ from ..optim import adamw
 from ..roofline import analysis
 from ..serve import steps as serve_steps
 from ..train.train_step import make_train_step
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, mesh_context
 
 
 # ---------------------------------------------------------------- input specs
@@ -93,7 +93,7 @@ def _compile_step(cfg, shape, mesh, microbatches: int = 1):
         params_shapes, psh)
     batch = input_specs(cfg, shape)
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             opt_shapes = jax.eval_shape(adamw.init, params_shapes)
             ospecs = {"m": pspecs, "v": pspecs, "count": P()}
@@ -176,6 +176,8 @@ def cache_specs(cfg, shape, mesh, cache_shapes):
 # ---------------------------------------------------------- cost correction
 def _raw_costs(compiled):
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per device kind
+        ca = ca[0] if ca else {}
     wires = analysis.collective_wire_bytes(compiled.as_text())
     return np.array([float(ca.get("flops", 0.0)),
                      float(ca.get("bytes accessed", 0.0)),

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..distributed.sharding import shard_map
 from ..models import transformer as T
 from ..optim import adamw, compression
 
@@ -106,7 +107,7 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
                 t.reshape((n_pods, t.shape[0] // n_pods) + t.shape[1:]),
                 P("pod", "data")), batch)
         batch_specs = jax.tree.map(lambda _: P("pod"), batch_p)
-        grads, new_error, loss, aux = jax.shard_map(
+        grads, new_error, loss, aux = shard_map(
             per_pod, mesh=mesh,
             in_specs=(P(), P(), batch_specs),
             out_specs=(P(), P("pod"), P(), P()),

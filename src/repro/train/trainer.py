@@ -11,6 +11,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..checkpoint.checkpointer import Checkpointer
 from ..distributed.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from ..distributed.sharding import param_specs
+from ..launch.mesh import mesh_context
 from ..models import transformer as T
 from ..optim import adamw
 from .train_step import make_train_step
@@ -55,7 +56,7 @@ class Trainer:
             log_every: int = 10) -> list[dict]:
         history = []
         it = iter(batches)
-        ctx = jax.sharding.set_mesh(self.mesh) if self.mesh is not None else None
+        ctx = mesh_context(self.mesh) if self.mesh is not None else None
         if ctx is not None:
             ctx.__enter__()
         try:

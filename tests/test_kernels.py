@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # tier-1 must collect (and run) without hypothesis installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 
@@ -33,9 +38,7 @@ def test_merge_tiebreak_a_first():
     assert list(np.array(ov)[:6]) == [1, 2, -1, 3, -2, -3]
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 600), m=st.integers(1, 600), seed=st.integers(0, 999))
-def test_merge_property(n, m, seed):
+def _check_merge_property(n, m, seed):
     rng = np.random.default_rng(seed)
     ak, bk = _sorted_run(rng, n), _sorted_run(rng, m)
     av = np.arange(n, dtype=np.int32); bv = np.arange(m, dtype=np.int32)
@@ -43,6 +46,18 @@ def test_merge_property(n, m, seed):
     ok = np.array(ok)[: n + m]
     assert np.all(ok[:-1] <= ok[1:]), "merge output not sorted"
     assert sorted(ok.tolist()) == sorted(np.concatenate([ak, bk]).tolist())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 600), m=st.integers(1, 600), seed=st.integers(0, 999))
+    def test_merge_property(n, m, seed):
+        _check_merge_property(n, m, seed)
+else:  # degraded sweep: fixed examples instead of hypothesis search
+    @pytest.mark.parametrize("n,m,seed", [
+        (1, 1, 0), (37, 256, 1), (600, 599, 2), (128, 128, 3), (512, 1, 4)])
+    def test_merge_property(n, m, seed):
+        _check_merge_property(n, m, seed)
 
 
 # ------------------------------------------------------------------ search

@@ -6,6 +6,9 @@ dict, while every intermediate state keeps the cross-s-node linkage and
 fanout properties.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # collection degrades to skip without it
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.refimpl import NBTree
@@ -45,6 +48,39 @@ def test_matches_dict_model(ops, f, sigma):
     nb.check_invariants()
     for k, v in model.items():
         assert nb.get(k) == v, k
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy,
+       f=st.integers(min_value=2, max_value=5),
+       sigma=st.sampled_from([16, 32, 64]),
+       ranges=st.lists(st.tuples(st.integers(0, 450), st.integers(0, 450)),
+                       min_size=1, max_size=6))
+def test_range_query_matches_dict_model(ops, f, sigma, ranges):
+    """Inclusive range scans == the dict model at every interleaving point,
+    including empty ranges (lo > hi), lo == hi, and ranges spanning the
+    whole key space (hence every node split)."""
+    nb = NBTree(f=f, sigma=sigma)
+    model = {}
+    for op, key, val in ops:
+        if op == "insert" or op == "update":
+            nb.insert(key, val)
+            model[int(key)] = val
+        elif op == "delete":
+            nb.delete(key)
+            model.pop(int(key), None)
+    for lo, hi in [*ranges, (0, 500), (17, 17), (400, 10)]:
+        rk, rv = nb.range_query(lo, hi)
+        want = sorted((k, v) for k, v in model.items() if lo <= k <= hi)
+        assert rk.tolist() == [k for k, _ in want], (lo, hi)
+        assert rv.tolist() == [v for _, v in want], (lo, hi)
+    nb.drain()
+    nb.check_invariants()
+    rk, rv = nb.range_query(0, 500)
+    want = sorted(model.items())
+    assert rk.tolist() == [k for k, _ in want]
+    assert rv.tolist() == [v for _, v in want]
 
 
 @settings(max_examples=20, deadline=None,

@@ -1,0 +1,219 @@
+"""Differential tests for the range-query subsystem (no hypothesis needed).
+
+Random interleavings of insert_batch / delete_batch / maintain / drain are
+applied identically to the device tier, the paper-faithful reference
+implementation, and a sorted-dict oracle; ``range_query_batch`` must match
+both at every interleaving point — including mid-maintenance states, empty
+ranges, lo == hi, and ranges spanning node splits.  Batch sizes are drawn
+from a fixed set so interpret-mode Pallas kernels compile once per shape.
+"""
+import numpy as np
+import pytest
+
+from repro.core.btree import BPlusTree, BPlusTreeBulk
+from repro.core.jax_nbtree import NBTreeIndex
+from repro.core.lsm import LSMTree
+from repro.core.refimpl import NBTree as RefNBTree
+
+KEYSPACE = 50_000
+BATCH_SIZES = (32, 64, 128)
+MAXR = 8192  # large enough that differential runs are never truncated
+
+
+def _oracle_range(model, lo, hi):
+    ks = sorted(k for k in model if lo <= k <= hi)
+    return ks, [model[k] for k in ks]
+
+
+def _ranges(rng, dev, model):
+    """8 ranges/checkpoint: random spans + point + inverted + full + splits."""
+    out = [(1, KEYSPACE)]                                    # full key space
+    if model:
+        k = int(rng.choice(sorted(model)))
+        out.append((k, k))                                   # lo == hi, hit
+    out.append((KEYSPACE // 2, KEYSPACE // 3))               # inverted: empty
+    if dev.root.skeys:                                       # spans a split
+        s = int(dev.root.skeys[0])
+        out.append((max(1, s - 200), s + 200))
+    while len(out) < 8:
+        lo = int(rng.integers(1, KEYSPACE))
+        out.append((lo, lo + int(rng.integers(0, KEYSPACE // 4))))
+    return out[:8]
+
+
+def _check_all(dev, ref, model, rng):
+    ranges = _ranges(rng, dev, model)
+    los = np.array([r[0] for r in ranges], np.uint32)
+    his = np.array([r[1] for r in ranges], np.uint32)
+    k, v, c, trunc = dev.range_query_batch(los, his, max_results=MAXR)
+    k, v, c, trunc = np.array(k), np.array(v), np.array(c), np.array(trunc)
+    for i, (lo, hi) in enumerate(ranges):
+        ek, ev = _oracle_range(model, lo, hi)
+        assert not trunc[i], (lo, hi)
+        assert c[i] == len(ek), (lo, hi, int(c[i]), len(ek))
+        assert k[i, : c[i]].tolist() == ek, (lo, hi)
+        assert v[i, : c[i]].tolist() == ev, (lo, hi)
+        rk, rv = ref.range_query(lo, hi)
+        assert rk.tolist() == ek and rv.tolist() == ev, (lo, hi)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_interleaved_ops_match_oracle_and_refimpl(seed):
+    rng = np.random.default_rng(seed)
+    dev = NBTreeIndex(f=3, sigma=128, max_nodes=64)
+    ref = RefNBTree(f=3, sigma=128)
+    model = {}
+    for _ in range(10):
+        op = rng.choice(["insert", "insert", "insert", "delete", "maintain",
+                         "drain"])
+        if op == "insert":
+            n = int(rng.choice(BATCH_SIZES))
+            ks = rng.integers(1, KEYSPACE, n).astype(np.uint32)
+            vs = rng.integers(0, 2**20, n).astype(np.int32)
+            dev.insert_batch(ks, vs)
+            for kk, vv in zip(ks.tolist(), vs.tolist()):
+                ref.insert(kk, vv)
+                model[kk] = vv
+        elif op == "delete":
+            n = int(rng.choice(BATCH_SIZES))
+            pool = sorted(model) if model else [1]
+            ks = rng.choice(np.array(pool, np.uint32), n)  # mostly present
+            ks[:: 4] = rng.integers(1, KEYSPACE, len(ks[::4]))  # some absent
+            dev.delete_batch(ks)
+            for kk in ks.tolist():
+                ref.delete(kk)
+                model.pop(kk, None)
+        elif op == "maintain":
+            dev.maintain(int(rng.integers(1, 4)))
+        else:
+            dev.drain()
+            ref.drain()
+        _check_all(dev, ref, model, rng)
+    dev.drain()
+    ref.drain()
+    dev.check_invariants()
+    ref.check_invariants()
+    _check_all(dev, ref, model, rng)
+
+
+def test_tombstones_never_resurface_across_maintenance():
+    """Deleted keys must stay deleted across flush / split / leaf-compaction
+    boundaries (regression: _compact_tombstones used to drop only the
+    tombstone record, resurrecting the stale older copy it deleted)."""
+    rng = np.random.default_rng(42)
+    dev = NBTreeIndex(f=3, sigma=128, max_nodes=64)
+    keys = rng.choice(np.arange(1, KEYSPACE, dtype=np.uint32), 4000,
+                      replace=False)
+
+    def insert(ks, v0):
+        for i in range(0, len(ks), 128):
+            ch = ks[i : i + 128]
+            dev.insert_batch(ch, np.arange(v0 + i, v0 + i + len(ch),
+                                           dtype=np.int32))
+            dev.maintain(2)
+
+    insert(keys[:2000], 0)
+    dev.drain()
+    deleted = keys[:256]
+    dev.delete_batch(deleted)           # tombstones enter the root
+    survivors = {int(k): i for i, k in enumerate(keys.tolist())
+                 if i >= 256 and i < 2000}
+
+    def assert_no_resurrection():
+        k, v, c, trunc = dev.range_query_batch(
+            np.array([1], np.uint32), np.array([KEYSPACE], np.uint32),
+            max_results=MAXR)
+        got = dict(zip(np.array(k)[0, : int(np.array(c)[0])].tolist(),
+                       np.array(v)[0, : int(np.array(c)[0])].tolist()))
+        assert not bool(np.array(trunc)[0])
+        hit = set(got) & {int(x) for x in deleted.tolist()}
+        assert not hit, f"deleted keys resurfaced: {sorted(hit)[:10]}"
+        for kk, vv in survivors.items():
+            assert got.get(kk) == vv, kk
+        p, _ = dev.query_batch(deleted)
+        assert not np.array(p).any()
+
+    assert_no_resurrection()
+    # deeper cascades push the tombstones through flushes and leaf
+    # compaction; splits rearrange the runs they pass through.
+    insert(keys[2000:], 2000)
+    survivors.update({int(k): 2000 + i for i, k in
+                      enumerate(keys[2000:].tolist())})
+    assert_no_resurrection()
+    dev.drain()
+    dev.check_invariants()
+    assert_no_resurrection()
+
+
+def test_flush_never_splits_duplicate_group():
+    """Regression: _flush's moved-boundary cut must not separate duplicate
+    copies of one key (fresh copy flushed down, stale copy left in the
+    ancestor would invert the ancestors-are-fresher rule)."""
+    dev = NBTreeIndex(f=3, sigma=8, max_nodes=16)
+    dev.insert_batch(np.arange(1, 8, dtype=np.uint32),
+                     np.arange(7, dtype=np.int32))
+    dev.drain()                                   # root becomes internal
+    dev.insert_batch(np.array([100], np.uint32), np.array([111], np.int32))
+    dev.insert_batch(np.array([100], np.uint32), np.array([222], np.int32))
+    # root run now ends [. . (100,222), (100,111)]; sigma cut falls between
+    dev.drain()
+    p, v = dev.query_batch(np.array([100], np.uint32))
+    assert bool(np.array(p)[0]) and int(np.array(v)[0]) == 222
+    k, v, c, _ = dev.range_query_batch([100], [100], max_results=8)
+    assert int(np.array(c)[0]) == 1 and int(np.array(v)[0, 0]) == 222
+
+
+@pytest.mark.parametrize("make", [
+    lambda: RefNBTree(f=3, sigma=64),
+    lambda: LSMTree(mem_pairs=64),
+    lambda: BPlusTree(),
+], ids=["refimpl", "lsm", "btree"])
+def test_baseline_range_matches_oracle(rng, make):
+    idx = make()
+    model = {}
+    keys = rng.choice(np.arange(1, KEYSPACE, dtype=np.uint64), 1500,
+                      replace=False)
+    for i, k in enumerate(keys.tolist()):
+        idx.insert(k, i)
+        model[k] = i
+    for k in keys[::5].tolist():
+        idx.delete(k)
+        model.pop(k, None)
+    for lo, hi in [(1, KEYSPACE), (KEYSPACE, 1), (int(keys[7]), int(keys[7])),
+                   (KEYSPACE // 4, KEYSPACE // 2), (0, 0)]:
+        rk, rv = idx.range_query(lo, hi)
+        ek, ev = _oracle_range(model, lo, hi)
+        assert rk.tolist() == ek, (lo, hi)
+        assert rv.tolist() == ev, (lo, hi)
+
+
+def test_bulk_btree_range(rng):
+    keys = rng.choice(np.arange(1, KEYSPACE, dtype=np.uint64), 2000,
+                      replace=False)
+    bt = BPlusTreeBulk(keys, np.arange(2000, dtype=np.int64))
+    model = {int(k): i for i, k in enumerate(keys.tolist())}
+    for lo, hi in [(1, KEYSPACE), (KEYSPACE // 3, KEYSPACE // 2),
+                   (int(keys[0]), int(keys[0])), (9, 3)]:
+        rk, rv = bt.range_query(lo, hi)
+        ek, ev = _oracle_range(model, lo, hi)
+        assert rk.tolist() == ek and rv.tolist() == ev, (lo, hi)
+
+
+def test_kernel_backed_scan_matches_device_root():
+    """ops.range_scan over a node row == the single-node slice of the fused
+    descent (kernel and descent share search + gather semantics)."""
+    rng = np.random.default_rng(7)
+    dev = NBTreeIndex(f=4, sigma=1024, max_nodes=16)
+    keys = rng.choice(np.arange(1, 2**20, dtype=np.uint32), 800, replace=False)
+    dev.insert_batch(keys, np.arange(800, dtype=np.int32))   # stays in root
+    from repro.kernels import ops
+
+    lo = np.array([1, 2**19], np.uint32)
+    hi = np.array([2**19, 2**20], np.uint32)
+    k1, v1, c1 = ops.range_scan(dev.run_keys[0], dev.run_vals[0],
+                                lo, hi, max_results=1024)
+    k2, v2, c2, _ = dev.range_query_batch(lo, hi, max_results=1024)
+    assert np.array_equal(np.array(c1), np.array(c2))
+    n0, n1 = int(np.array(c1)[0]), int(np.array(c1)[1])
+    assert np.array_equal(np.array(k1)[0, :n0], np.array(k2)[0, :n0])
+    assert np.array_equal(np.array(v1)[1, :n1], np.array(v2)[1, :n1])

@@ -1,0 +1,87 @@
+"""range_scan kernel edge cases + interpret-vs-XLA-reference agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY_MAX = np.uint32(0xFFFFFFFF)
+
+
+def _sorted_run(rng, n):
+    return np.sort(rng.choice(2**31, n, replace=False)).astype(np.uint32)
+
+
+def _scan(run, vals, lo, hi, maxr=128):
+    k, v, c = ops.range_scan(jnp.array(run), jnp.array(vals),
+                             jnp.array(lo, np.uint32), jnp.array(hi, np.uint32),
+                             max_results=maxr)
+    return np.array(k), np.array(v), np.array(c)
+
+
+@pytest.mark.parametrize("n,q,maxr", [(16, 8, 128), (1000, 64, 128),
+                                      (5000, 300, 256), (65536, 40, 512)])
+def test_random_agreement_with_ref(rng, n, q, maxr):
+    run = _sorted_run(rng, n)
+    vals = np.arange(n, dtype=np.int32)
+    lo = rng.integers(0, 2**31, q).astype(np.uint32)
+    hi = (lo.astype(np.uint64) + rng.integers(0, 2**27, q)).clip(
+        0, 2**32 - 2).astype(np.uint32)
+    k, v, c = _scan(run, vals, lo, hi, maxr)
+    rk, rv, rc = ref.range_scan_ref(jnp.array(run), jnp.array(vals),
+                                    jnp.array(lo), jnp.array(hi), maxr)
+    assert np.array_equal(k, np.array(rk))
+    assert np.array_equal(v, np.array(rv))
+    assert np.array_equal(c, np.array(rc))
+
+
+def test_all_keys_below_lo():
+    run = np.arange(1, 101, dtype=np.uint32)
+    vals = np.arange(100, dtype=np.int32)
+    k, v, c = _scan(run, vals, [1000], [2000])
+    assert c[0] == 0
+    assert (k[0] == KEY_MAX).all() and (v[0] == 0).all()
+
+
+def test_all_keys_above_hi():
+    run = np.arange(1000, 1100, dtype=np.uint32)
+    vals = np.arange(100, dtype=np.int32)
+    k, v, c = _scan(run, vals, [1], [999])
+    assert c[0] == 0
+    assert (k[0] == KEY_MAX).all()
+
+
+def test_duplicates_at_boundary():
+    run = np.array([5, 7, 7, 7, 9, 9], np.uint32)
+    vals = np.arange(6, dtype=np.int32)
+    k, v, c = _scan(run, vals, [7, 7, 9], [7, 9, 9])
+    assert c.tolist() == [3, 5, 2]
+    assert k[0, :3].tolist() == [7, 7, 7] and v[0, :3].tolist() == [1, 2, 3]
+    assert k[1, :5].tolist() == [7, 7, 7, 9, 9]
+    assert k[2, :2].tolist() == [9, 9] and v[2, :2].tolist() == [4, 5]
+
+
+def test_overflow_truncation_reports_total_count():
+    run = np.arange(1, 1001, dtype=np.uint32)
+    vals = np.arange(1000, dtype=np.int32)
+    k, v, c = _scan(run, vals, [1], [2000], maxr=128)
+    assert c[0] == 1000                      # total matches, not the capacity
+    assert k[0].tolist() == list(range(1, 129))   # first 128 in key order
+    assert v[0].tolist() == list(range(128))
+
+
+def test_empty_point_and_inverted_ranges():
+    run = np.array([10, 20, 30], np.uint32)
+    vals = np.array([0, 1, 2], np.int32)
+    k, v, c = _scan(run, vals, [20, 21, 25, 0], [20, 29, 15, 2**32 - 2])
+    assert c.tolist() == [1, 0, 0, 3]        # point hit, gap, inverted, all
+    assert k[0, 0] == 20 and v[0, 0] == 1
+
+
+def test_padding_keys_never_match():
+    """hi = KEY_MAX-1 must return the whole run but no KEY_MAX padding."""
+    run = np.array([3, 4, 5], np.uint32)     # kernel pads run to 128 lanes
+    vals = np.array([7, 8, 9], np.int32)
+    k, v, c = _scan(run, vals, [0], [2**32 - 2])
+    assert c[0] == 3
+    assert k[0, :3].tolist() == [3, 4, 5] and (k[0, 3:] == KEY_MAX).all()

@@ -1,11 +1,12 @@
 """Serving-engine bench: decode-step tail with bounded vs eager index upkeep.
 
-The paper's no-stall property at the engine level: with ``maintain(1)`` the
-per-step index work is bounded by ONE flush/split unit, so the worst step
-pays one unit; the *eager* policy (drain the whole cascade the moment the
-root fills — the LSM-compaction analogue) pays the full multi-level cascade
-in one step.  The p100 gap is the deamortization win and grows with tree
-depth (log n); at bench scale the cascade is 2-4 units deep.
+The paper's no-stall property at the engine level, driven through the
+unified ``StorageEngine`` protocol: with ``maintain(1)`` the per-step index
+work is bounded by ONE flush/split unit, so the worst step pays one unit;
+the *eager* policy (drain the whole cascade the moment the root fills — the
+LSM-compaction analogue) pays the full multi-level cascade in one step.
+The p100 gap is the deamortization win and grows with tree depth (log n);
+at bench scale the cascade is 2-4 units deep.
 
 Per-unit wall-clock here is inflated by interpret-mode Pallas merges (the
 kernel is the TPU target); the *ratio* between policies is the signal.
@@ -16,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core.jax_nbtree import NBTreeIndex
+from repro.core.engine_api import OpBatch, make_engine
 
 
 def run(n_steps: int = 110, batch: int = 64, warmup: int = 140):
@@ -25,21 +26,23 @@ def run(n_steps: int = 110, batch: int = 64, warmup: int = 140):
     # the structural paths don't pollute the steady-state tail.
     rng = np.random.default_rng(0)
     rows = []
-    range_idx = None
+    range_eng = None
     for mode in ("deamortized", "eager"):
-        idx = NBTreeIndex(f=4, sigma=2048, max_nodes=512)
+        eng = make_engine("jax-nbtree", f=4, sigma=2048, max_nodes=512)
         key_src = iter(rng.choice(np.arange(1, 2**31, dtype=np.uint32),
                                   (n_steps + warmup) * batch * 2, replace=False))
-        times, unit_steps = [], 0
+        times = []
         for s in range(n_steps + warmup):
             ks = np.fromiter(key_src, np.uint32, batch)
+            step = OpBatch.concat([
+                OpBatch.inserts(ks, np.arange(batch, dtype=np.int64)),
+                OpBatch.queries(ks[:16])])
             t0 = time.perf_counter()
-            idx.insert_batch(ks, np.arange(batch, dtype=np.int32))
+            eng.apply(step)
             if mode == "deamortized":
-                idx.maintain(1)          # bounded: <= 1 unit per step
+                eng.maintain(1)          # bounded: <= 1 unit per step
             else:
-                idx.drain()              # eager: full cascade stall
-            idx.query_batch(ks[:16])
+                eng.drain()              # eager: full cascade stall
             if s >= warmup:
                 times.append(time.perf_counter() - t0)
         times = np.asarray(times) * 1e3
@@ -48,22 +51,22 @@ def run(n_steps: int = 110, batch: int = 64, warmup: int = 140):
                          p99_ms=float(np.percentile(times, 99)),
                          p100_ms=float(times.max())))
         if mode == "deamortized":
-            range_idx = idx
+            range_eng = eng
 
-    # ---- range scans on the loaded index (selectivity sweep) ---------------
+    # ---- range scans on the loaded engine (selectivity sweep) --------------
     # keys above were drawn uniformly from [1, 2^31); a span of s * 2^31
     # therefore matches ~s of the live pairs.
-    range_idx.drain()
+    range_eng.drain()
     for s in (0.001, 0.01):
         span = int((2**31) * s)
-        lo = rng.integers(1, 2**31 - span, 32).astype(np.uint32)
-        hi = (lo + span).astype(np.uint32)
-        range_idx.range_query_batch(lo, hi, max_results=1024)  # compile/warm
+        lo = rng.integers(1, 2**31 - span, 32).astype(np.uint64)
+        hi = lo + np.uint64(span)
+        scan = OpBatch.ranges(lo, hi)
+        range_eng.apply(scan)                          # compile/warm
         times = []
         for _ in range(7):
             t0 = time.perf_counter()
-            out = range_idx.range_query_batch(lo, hi, max_results=1024)
-            out[0].block_until_ready()
+            range_eng.apply(scan)
             times.append(time.perf_counter() - t0)
         times = np.asarray(times) * 1e3
         rows.append(dict(name=f"engine_range_b32_sel{s:g}",

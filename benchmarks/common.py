@@ -11,11 +11,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.bepsilon import BEpsilonTree
-from repro.core.btree import BPlusTree, BPlusTreeBulk
 from repro.core.cost_model import HDD, SSD
-from repro.core.lsm import LSMTree
-from repro.core.refimpl import NBTree
+from repro.core.engine_api import BulkBTreeEngine, OpBatch, OpKind, make_engine
 
 
 def workload(n: int, seed: int = 0):
@@ -42,40 +39,45 @@ def scaled_device(base, sigma_pairs: int):
                   base.seek_s * factor, base.read_bw, base.write_bw)
 
 
-def insert_all(index, keys) -> tuple[float, float]:
-    """(avg_insert_s, max_insert_s) over the whole workload."""
-    times = [index.insert(k, i) for i, k in enumerate(keys)]
-    total = index.cm.time
-    return total / len(keys), float(np.max(times))
+def make_bench_engine(name: str, device, sigma_pairs: int):
+    """Registered StorageEngine configured for the scaled cost model."""
+    dev = scaled_device(device, sigma_pairs)
+    kw = {
+        "nbtree": dict(f=3, sigma=sigma_pairs, device=dev),
+        "nbtree-nobloom": dict(f=3, sigma=sigma_pairs, device=dev),
+        "nbtree-basic": dict(f=3, sigma=sigma_pairs, device=dev),
+        "lsm": dict(mem_pairs=sigma_pairs, ratio=10, device=dev),
+        "blsm": dict(mem_pairs=sigma_pairs, ratio=10, device=dev),
+        "bepsilon": dict(node_bytes=1 << 16, cached_levels=1, device=dev),
+        "btree": dict(device=dev),
+    }[name]
+    return make_engine(name, **kw)
 
 
-def query_sample(index, keys, n_q: int = 400, seed: int = 1):
+def bulk_btree_engine(keys, device, sigma_pairs: int):
+    """The paper's static query yardstick (QUERY/RANGE only)."""
+    return BulkBTreeEngine(keys, np.arange(len(keys), dtype=np.int64),
+                           device=scaled_device(device, sigma_pairs))
+
+
+def insert_all(engine, keys) -> tuple[float, float]:
+    """(avg_insert_s, max_insert_s) over the whole workload.
+
+    avg is throughput time (total charged cost / n, any clock); max is the
+    worst *foreground* op latency (the paper's worst-case-delay metric).
+    """
+    before = engine.io_time_s()
+    res = engine.apply(OpBatch.inserts(keys, np.arange(len(keys),
+                                                       dtype=np.int64)))
+    return (engine.io_time_s() - before) / len(keys), float(res.latency_s.max())
+
+
+def query_sample(engine, keys, n_q: int = 400, seed: int = 1):
     rng = np.random.default_rng(seed)
     q = rng.choice(keys, n_q, replace=False)
-    times = []
-    for k in q:
-        _, t = index.query(k)
-        times.append(t)
-    return float(np.mean(times)), float(np.max(times))
-
-
-def make_index(name: str, device, sigma_pairs: int):
-    device = scaled_device(device, sigma_pairs)
-    if name == "nbtree":
-        return NBTree(f=3, sigma=sigma_pairs, device=device)
-    if name == "nbtree-nobloom":
-        return NBTree(f=3, sigma=sigma_pairs, device=device, use_bloom=False)
-    if name == "nbtree-basic":
-        return NBTree(f=3, sigma=sigma_pairs, device=device, deamortize=False)
-    if name == "lsm":  # leveldb/rocksdb-style leveling + bloom
-        return LSMTree(mem_pairs=sigma_pairs, ratio=10, device=device)
-    if name == "blsm":  # bLSM-style level cap
-        return LSMTree(mem_pairs=sigma_pairs, ratio=10, device=device, max_levels=3)
-    if name == "bepsilon":
-        return BEpsilonTree(node_bytes=1 << 16, cached_levels=1, device=device)
-    if name == "btree":
-        return BPlusTree(device=device)
-    raise KeyError(name)
+    res = engine.apply(OpBatch.queries(q))
+    lat = res.latencies(OpKind.QUERY)
+    return float(np.mean(lat)), float(np.max(lat))
 
 
 DEVICES = {"hdd": HDD, "ssd": SSD}

@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.cost_model import HDD
-from repro.core.refimpl import NBTree
+from repro.core.engine_api import make_engine
 
 from .common import insert_all, query_sample, scaled_device, workload
 
@@ -19,14 +19,15 @@ def run(n: int = 120_000):
     rows = []
     for sigma in (1024, 8192):                 # "small" vs "large" sigma
         for f in (3, 5, 9, 15):
-            nb = NBTree(f=f, sigma=sigma, device=scaled_device(HDD, sigma))
+            nb = make_engine("nbtree", f=f, sigma=sigma,
+                             device=scaled_device(HDD, sigma))
             avg_ins, _ = insert_all(nb, keys)
             nb.drain()
             avg_q, _ = query_sample(nb, keys)
             rows.append(dict(fig="4", sigma=sigma, f=f,
                              avg_insert_us=avg_ins * 1e6,
                              avg_query_ms=avg_q * 1e3,
-                             height=nb.height))
+                             height=nb.height()))
     return rows
 
 

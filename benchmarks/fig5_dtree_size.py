@@ -7,7 +7,7 @@ large sigma (in-memory component absorbs queries).
 from __future__ import annotations
 
 from repro.core.cost_model import HDD
-from repro.core.refimpl import NBTree
+from repro.core.engine_api import make_engine
 
 from .common import insert_all, query_sample, scaled_device, workload
 
@@ -18,14 +18,15 @@ def run(n: int = 120_000):
     for sigma in (512, 1024, 2048, 4096, 8192, 16384):
         # NB: the device is *fixed* across the sigma sweep (the paper varies
         # sigma on one physical disk); scaled to the sweep's midpoint.
-        nb = NBTree(f=3, sigma=sigma, device=scaled_device(HDD, 4096))
+        nb = make_engine("nbtree", f=3, sigma=sigma,
+                         device=scaled_device(HDD, 4096))
         avg_ins, _ = insert_all(nb, keys)
         nb.drain()
         avg_q, _ = query_sample(nb, keys)
         rows.append(dict(fig="5", sigma=sigma,
                          avg_insert_us=avg_ins * 1e6,
                          avg_query_ms=avg_q * 1e3,
-                         height=nb.height))
+                         height=nb.height()))
     return rows
 
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import DEVICES, insert_all, make_index, workload
+from .common import DEVICES, insert_all, make_bench_engine, workload
 
 INDICES = ("nbtree", "nbtree-basic", "lsm", "blsm", "bepsilon", "btree")
 
@@ -25,9 +25,9 @@ def run(sizes=(40_000, 120_000, 360_000)):
             for name in INDICES:
                 if name == "btree" and n > 40_000:
                     continue  # excluded by the paper's 100us rule (see check)
-                idx = make_index(name, dev, sigma)
-                avg, mx = insert_all(idx, keys)
-                idx.drain()
+                eng = make_bench_engine(name, dev, sigma)
+                avg, mx = insert_all(eng, keys)
+                eng.drain()
                 rows.append(dict(fig="6/7", device=dev_name, n=n, index=name,
                                  avg_insert_us=avg * 1e6, max_insert_ms=mx * 1e3))
     return rows

@@ -6,12 +6,8 @@ faster than the LSM family; maximum query bounded by the s-tree height
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.btree import BPlusTreeBulk
-
-from .common import (DEVICES, insert_all, make_index, query_sample,
-                     scaled_device, workload)
+from .common import (DEVICES, bulk_btree_engine, insert_all,
+                     make_bench_engine, query_sample, workload)
 
 INDICES = ("nbtree", "nbtree-nobloom", "lsm", "blsm")
 
@@ -23,14 +19,13 @@ def run(sizes=(40_000, 160_000)):
             keys = workload(n)
             sigma = max(1024, n // 64)
             for name in INDICES:
-                idx = make_index(name, dev, sigma)
-                insert_all(idx, keys)
-                idx.drain()
-                avg_q, max_q = query_sample(idx, keys, n_q=600)
+                eng = make_bench_engine(name, dev, sigma)
+                insert_all(eng, keys)
+                eng.drain()
+                avg_q, max_q = query_sample(eng, keys, n_q=600)
                 rows.append(dict(fig="8/9", device=dev_name, n=n, index=name,
                                  avg_query_ms=avg_q * 1e3, max_query_ms=max_q * 1e3))
-            bt = BPlusTreeBulk(keys, np.arange(n, dtype=np.int64),
-                               device=scaled_device(dev, sigma))
+            bt = bulk_btree_engine(keys, dev, sigma)
             avg_q, max_q = query_sample(bt, keys, n_q=600)
             rows.append(dict(fig="8/9", device=dev_name, n=n, index="btree-bulk",
                              avg_query_ms=avg_q * 1e3, max_query_ms=max_q * 1e3))

@@ -14,9 +14,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.btree import BPlusTreeBulk
+from repro.core.engine_api import OpBatch
 
-from .common import DEVICES, make_index, scaled_device, workload
+from .common import (DEVICES, bulk_btree_engine, insert_all,
+                     make_bench_engine, workload)
 
 #: keys are drawn uniformly from [1, 2^48) (see common.workload).
 KEYSPACE = 1 << 48
@@ -32,28 +33,22 @@ def run(sizes=(40_000,), n_q: int = 16, seed: int = 2):
             sigma = max(1024, n // 64)
             built = []
             for name in INDICES:
-                idx = make_index(name, dev, sigma)
-                for i, k in enumerate(keys):
-                    idx.insert(k, i)
-                idx.drain()
-                built.append((name, idx))
-            built.append(("btree-bulk",
-                          BPlusTreeBulk(keys, np.arange(n, dtype=np.int64),
-                                        device=scaled_device(dev, sigma))))
+                eng = make_bench_engine(name, dev, sigma)
+                insert_all(eng, keys)
+                eng.drain()
+                built.append((name, eng))
+            built.append(("btree-bulk", bulk_btree_engine(keys, dev, sigma)))
             rng = np.random.default_rng(seed)
             for s in SELECTIVITIES:
                 span = max(1, int(KEYSPACE * s))
                 los = rng.integers(1, KEYSPACE - span, n_q).astype(np.uint64)
                 his = (los + np.uint64(span)).astype(np.uint64)
-                for name, idx in built:
-                    times, hits = [], 0
-                    for lo, hi in zip(los, his):
-                        rk, _ = idx.range_query(lo, hi)
-                        times.append(idx._last_query_time)
-                        hits += len(rk)
+                for name, eng in built:
+                    res = eng.apply(OpBatch.ranges(los, his))
+                    hits = sum(len(rk) for rk, _ in res.range_hits)
                     rows.append(dict(fig="range", device=dev_name, n=n,
                                      index=name, selectivity=s,
-                                     avg_range_ms=float(np.mean(times)) * 1e3,
+                                     avg_range_ms=float(res.latency_s.mean()) * 1e3,
                                      avg_hits=hits / n_q))
     return rows
 

@@ -11,7 +11,8 @@ import os
 import time
 
 from . import (bench_engine, bench_kernels, fig4_fanout, fig5_dtree_size,
-               fig67_insertion, fig89_query, fig_range, table2_theory)
+               fig67_insertion, fig89_query, fig_mixed, fig_range,
+               table2_theory)
 
 SUITES = [
     ("fig4_fanout (Fig 4a/4b)", fig4_fanout),
@@ -19,6 +20,7 @@ SUITES = [
     ("fig67_insertion (Figs 6,7)", fig67_insertion),
     ("fig89_query (Figs 8,9)", fig89_query),
     ("fig_range (range scans)", fig_range),
+    ("fig_mixed (mixed workloads)", fig_mixed),
     ("table2_theory (Table 2)", table2_theory),
     ("bench_kernels (Pallas)", bench_kernels),
     ("bench_engine (serving)", bench_engine),
@@ -44,6 +46,8 @@ def main() -> None:
             kwargs = {"sizes": (20_000, 60_000)}
         elif args.quick and mod is fig_range:
             kwargs = {"sizes": (20_000,), "n_q": 8}
+        elif args.quick and mod is fig_mixed:
+            kwargs = {"mixes": ("ycsb-a",), "n_ops": 1024, "preload": 1024}
         elif args.quick and mod is table2_theory:
             kwargs = {"sizes": (10_000, 30_000, 90_000)}
         rows = mod.run(**kwargs)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import insert_all, make_index, workload
+from .common import insert_all, make_bench_engine, workload
 from repro.core.cost_model import HDD
 
 
@@ -18,8 +18,8 @@ def run(sizes=(20_000, 60_000, 180_000)):
         maxes = []
         for n in sizes:
             keys = workload(n)
-            idx = make_index(name, HDD, max(1024, n // 64))
-            _, mx = insert_all(idx, keys)
+            eng = make_bench_engine(name, HDD, max(1024, n // 64))
+            _, mx = insert_all(eng, keys)
             maxes.append(mx)
         slope = np.polyfit(np.log(sizes), np.log(np.maximum(maxes, 1e-9)), 1)[0]
         rows.append(dict(fig="table2", index=name, slope=float(slope),

@@ -1,50 +1,62 @@
 """The paper's own scenario: insertion-intensive store vs LSM vs B+-tree.
 
-Reproduces the headline comparison (Figs 6-9) at demo scale and prints the
-worst-case-insert and query-time contrast.
+Reproduces the headline comparison (Figs 6-9) at demo scale through the
+unified StorageEngine API — every index is driven by the same OpBatch
+stream — and finishes with a mixed YCSB-A-style blend through the workload
+driver (the measurement regime of the paper's LSM baselines).
 
   PYTHONPATH=src python examples/kvstore_demo.py
 """
 import numpy as np
 
-from repro.core.btree import BPlusTreeBulk
 from repro.core.cost_model import HDD
-from repro.core.lsm import LSMTree
-from repro.core.refimpl import NBTree
+from repro.core.engine_api import BulkBTreeEngine, OpBatch, make_engine
+from repro.workloads import make_workload
+from repro.workloads.driver import run_workload
 
 n = 60_000
 rng = np.random.default_rng(7)
 keys = np.unique(rng.integers(1, 1 << 40, size=int(n * 1.02), dtype=np.uint64))[:n]
 keys = rng.permutation(keys)
+load = OpBatch.inserts(keys, np.arange(n, dtype=np.int64))
 
-nb, lsm = NBTree(f=3, sigma=2048, device=HDD), LSMTree(mem_pairs=2048, device=HDD)
-nb_t = [nb.insert(k, i) for i, k in enumerate(keys)]
-lsm_t = [lsm.insert(k, i) for i, k in enumerate(keys)]
+nb = make_engine("nbtree", f=3, sigma=2048, device=HDD)
+lsm = make_engine("lsm", mem_pairs=2048, device=HDD)
+nb_t = nb.apply(load).latency_s
+lsm_t = lsm.apply(load).latency_s
 nb.drain()
-print(f"avg insert   : NB {nb.cm.time/n*1e6:8.1f} us | LSM {lsm.cm.time/n*1e6:8.1f} us")
-print(f"WORST insert : NB {max(nb_t)*1e3:8.3f} ms | LSM {max(lsm_t)*1e3:8.1f} ms  "
+print(f"avg insert   : NB {nb.io_time_s()/n*1e6:8.1f} us | "
+      f"LSM {lsm.io_time_s()/n*1e6:8.1f} us")
+print(f"WORST insert : NB {nb_t.max()*1e3:8.3f} ms | LSM {lsm_t.max()*1e3:8.1f} ms  "
       f"(<-- the paper's 1000x, Fig. 7)")
 
-bulk = BPlusTreeBulk(keys, np.arange(n, dtype=np.int64), device=HDD)
-q = rng.choice(keys, 300, replace=False)
-nbq = np.mean([nb.query(k)[1] for k in q])
-lsmq = np.mean([lsm.query(k)[1] for k in q])
-btq = np.mean([bulk.query(k)[1] for k in q])
+bulk = BulkBTreeEngine(keys, np.arange(n, dtype=np.int64), device=HDD)
+q = OpBatch.queries(rng.choice(keys, 300, replace=False))
+nbq, lsmq, btq = (eng.apply(q).latency_s.mean() for eng in (nb, lsm, bulk))
 print(f"avg query    : NB {nbq*1e3:6.2f} ms | LSM {lsmq*1e3:6.2f} ms | "
       f"B+bulk {btq*1e3:6.2f} ms   (Fig. 8)")
 
-# range scans (1% selectivity): every index serves the same inclusive API.
+# range scans (1% selectivity): every engine serves the same inclusive API.
 span = np.uint64((1 << 40) // 100)
 los = rng.integers(1, (1 << 40) - int(span), 30).astype(np.uint64)
+scan = OpBatch.ranges(los, los + span)
 res = {}
-for name, idx in (("NB", nb), ("LSM", lsm), ("B+bulk", bulk)):
-    t, hits = [], 0
-    for lo in los:
-        rk, _ = idx.range_query(lo, lo + span)
-        t.append(idx._last_query_time)
-        hits += len(rk)
-    res[name] = (np.mean(t), hits)
-assert len({h for _, h in res.values()}) == 1, "indexes disagree on range hits"
+for name, eng in (("NB", nb), ("LSM", lsm), ("B+bulk", bulk)):
+    r = eng.apply(scan)
+    res[name] = (r.latency_s.mean(), sum(len(rk) for rk, _ in r.range_hits))
+assert len({h for _, h in res.values()}) == 1, "engines disagree on range hits"
 print("range scan 1%: " + " | ".join(
     f"{k} {v[0]*1e3:6.2f} ms" for k, v in res.items())
-    + f"   ({res['NB'][1] // len(los)} hits/query, all indexes agree)")
+    + f"   ({res['NB'][1] // len(los)} hits/query, all engines agree)")
+
+# mixed load (YCSB-A-style 50/50 blend, zipfian keys) via the driver.
+print("\nmixed ycsb-a : worst-case foreground delay under 50/50 insert/read")
+for name, kw in (("nbtree", dict(f=3, sigma=1024, device=HDD)),
+                 ("lsm", dict(mem_pairs=1024, device=HDD))):
+    wl = make_workload("ycsb-a", key_space=1 << 20, n_ops=4096,
+                       batch_size=256, preload=2048)
+    rep = run_workload(make_engine(name, **kw), wl, maintain_budget=1)
+    ins = rep["per_kind"]["insert"]
+    print(f"  {name:>6}: insert p50 {ins['p50_s']*1e6:8.1f} us | "
+          f"p100 {ins['p100_s']*1e3:8.3f} ms | "
+          f"live pairs {rep['stats']['total_pairs']}")

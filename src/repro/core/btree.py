@@ -63,6 +63,12 @@ class BPlusTreeBulk:
         self._last_query_time = t.seconds
         return out
 
+    def drain(self) -> None:  # API parity with the dynamic engines
+        pass
+
+    def total_pairs(self) -> int:
+        return len(self.keys)
+
 
 class BPlusTree:
     """Incremental B+-tree: per-insert leaf read-modify-write.

@@ -1,0 +1,609 @@
+"""Unified StorageEngine protocol over every index tier (DESIGN.md §5).
+
+The paper's headline claims are *comparative* — NB-tree vs LSM-tree vs
+B+-tree vs B^eps-tree on insertion rate, query latency, and worst-case
+delay — so every benchmark, test and demo must be able to stream the same
+operation sequence through any engine and read back the same shaped
+answers.  This module is that surface:
+
+* :class:`OpBatch` — a columnar batch of operations (``INSERT`` /
+  ``DELETE`` / ``QUERY`` / ``RANGE``), the only way work enters an engine;
+* :class:`OpResult` — per-op visible results plus per-op latency (simulated
+  I/O seconds on the cost-model tiers, host wall-clock on the device tier);
+* :class:`StorageEngine` — ``apply(OpBatch) -> OpResult``,
+  ``maintain(budget) -> pending``, ``drain()``, and a uniform ``stats()``
+  snapshot (:class:`EngineStats`);
+* thin adapters that retrofit the five tiers (``refimpl.NBTree``,
+  ``lsm.LSMTree``, ``btree.BPlusTree``, ``bepsilon.BEpsilonTree`` and the
+  device-tier ``jax_nbtree.NBTreeIndex``) onto the protocol, keeping the
+  existing classes as the implementation core;
+* an engine registry (:func:`register_engine` / :func:`make_engine`), with
+  :data:`FIVE_TIERS` naming the paper's comparison set.
+
+Semantics are sequential within a batch: op i+1 observes op i.  Adapters
+may still vectorize — the device adapter groups maximal same-kind runs into
+one fused device call, which preserves the sequential semantics because
+``insert_batch`` resolves intra-batch duplicates newest-wins and queries
+cannot appear inside an insert group.
+
+Key/value domain: keys are uint64 on the cost-model tiers and uint32 on the
+device tier, so a workload that must run on *all* tiers keeps its keys in
+``[1, 2^31)``; values must be non-negative int32-representable (the
+tombstone sentinels ``sorted_run.TOMBSTONE`` = -1 and ``TOMBSTONE32`` are
+reserved).  The workload generator (``repro.workloads``) enforces both.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import enum
+import time
+
+import numpy as np
+
+from .bepsilon import BEpsilonTree
+from .btree import BPlusTree, BPlusTreeBulk
+from .cost_model import HDD, CostModel, Device
+from .lsm import LSMTree
+from .refimpl import NBTree
+from .sorted_run import KEY_DTYPE, TOMBSTONE, VAL_DTYPE
+
+
+class OpKind(enum.IntEnum):
+    INSERT = 0
+    DELETE = 1
+    QUERY = 2
+    RANGE = 3
+
+
+class UnsupportedOp(RuntimeError):
+    """Raised by engines that cannot serve an op kind (e.g. bulk B+-tree inserts)."""
+
+
+@dataclasses.dataclass
+class OpBatch:
+    """Columnar operation batch: parallel arrays, one row per op.
+
+    ``keys`` is the op key (RANGE: inclusive lower bound), ``vals`` the
+    INSERT payload (ignored elsewhere), ``his`` the RANGE inclusive upper
+    bound (ignored elsewhere).
+    """
+
+    kinds: np.ndarray   # int8   (B,)
+    keys: np.ndarray    # uint64 (B,)
+    vals: np.ndarray    # int64  (B,)
+    his: np.ndarray     # uint64 (B,)
+
+    def __post_init__(self):
+        self.kinds = np.asarray(self.kinds, np.int8)
+        self.keys = np.asarray(self.keys, KEY_DTYPE)
+        self.vals = np.asarray(self.vals, VAL_DTYPE)
+        self.his = np.asarray(self.his, KEY_DTYPE)
+        n = len(self.kinds)
+        assert self.keys.shape == self.vals.shape == self.his.shape == (n,), \
+            "OpBatch arrays must be parallel 1-d arrays of one length"
+
+    def __len__(self) -> int:
+        return len(self.kinds)
+
+    # ------------------------------------------------------------- constructors
+    @staticmethod
+    def inserts(keys, vals) -> "OpBatch":
+        keys = np.asarray(keys, KEY_DTYPE)
+        return OpBatch(np.full(len(keys), OpKind.INSERT, np.int8), keys,
+                       np.asarray(vals, VAL_DTYPE), np.zeros(len(keys), KEY_DTYPE))
+
+    @staticmethod
+    def deletes(keys) -> "OpBatch":
+        keys = np.asarray(keys, KEY_DTYPE)
+        z = np.zeros(len(keys), KEY_DTYPE)
+        return OpBatch(np.full(len(keys), OpKind.DELETE, np.int8), keys,
+                       np.zeros(len(keys), VAL_DTYPE), z)
+
+    @staticmethod
+    def queries(keys) -> "OpBatch":
+        keys = np.asarray(keys, KEY_DTYPE)
+        z = np.zeros(len(keys), KEY_DTYPE)
+        return OpBatch(np.full(len(keys), OpKind.QUERY, np.int8), keys,
+                       np.zeros(len(keys), VAL_DTYPE), z)
+
+    @staticmethod
+    def ranges(los, his) -> "OpBatch":
+        los = np.asarray(los, KEY_DTYPE)
+        return OpBatch(np.full(len(los), OpKind.RANGE, np.int8), los,
+                       np.zeros(len(los), VAL_DTYPE), np.asarray(his, KEY_DTYPE))
+
+    @staticmethod
+    def concat(batches) -> "OpBatch":
+        batches = list(batches)
+        return OpBatch(np.concatenate([b.kinds for b in batches]),
+                       np.concatenate([b.keys for b in batches]),
+                       np.concatenate([b.vals for b in batches]),
+                       np.concatenate([b.his for b in batches]))
+
+
+@dataclasses.dataclass
+class OpResult:
+    """Visible results + per-op latency for one applied :class:`OpBatch`.
+
+    ``found``/``values`` are meaningful on QUERY rows, ``range_hits[i]`` is
+    a ``(keys, vals)`` pair on RANGE rows (None elsewhere), ``latency_s``
+    on every row (the engine's clock: simulated I/O seconds on cost-model
+    tiers, amortized host wall-clock on the device tier).
+    ``range_truncated[i]`` flags RANGE rows whose result hit an engine
+    capacity limit and is incomplete (device tier only — the cost-model
+    tiers are always exact); callers needing exactness must check it.
+    """
+
+    kinds: np.ndarray
+    found: np.ndarray        # bool  (B,)
+    values: np.ndarray       # int64 (B,) — -1 where not found / not a query
+    range_hits: list         # list[Optional[tuple[np.ndarray, np.ndarray]]]
+    latency_s: np.ndarray    # float64 (B,)
+    range_truncated: np.ndarray = None  # bool (B,)
+
+    def __post_init__(self):
+        if self.range_truncated is None:
+            self.range_truncated = np.zeros(len(self.kinds), bool)
+
+    def latencies(self, kind: OpKind | None = None) -> np.ndarray:
+        if kind is None:
+            return self.latency_s
+        return self.latency_s[self.kinds == int(kind)]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Uniform engine snapshot; every field is cumulative-since-construction.
+
+    ``io_time_s`` is the engine's charged cost (simulated seconds on the
+    cost-model tiers, accumulated host wall-clock on the device tier) and
+    must never decrease.  ``total_pairs`` is the *logical* live pair count
+    (distinct non-deleted keys — what an all-keyspace range scan would
+    return); ``physical_pairs`` is the implementation's resident count,
+    which may include stale duplicates and tombstones awaiting compaction.
+    ``pending_debt`` is the deferred maintenance still owed (0 = fully
+    maintained), the deamortization ledger of paper Sec. 5.1.
+    """
+
+    engine: str
+    clock: str               # "sim" (cost model) or "wall" (device tier)
+    io_time_s: float
+    io_seeks: int
+    io_bytes_read: int
+    io_bytes_written: int
+    height: int
+    total_pairs: int
+    physical_pairs: int
+    pending_debt: int
+    n_inserts: int
+    n_deletes: int
+    n_queries: int
+    n_ranges: int
+
+
+class StorageEngine(abc.ABC):
+    """The unified engine protocol (see module docstring).
+
+    Subclasses implement the four scalar hooks (or override :meth:`apply`
+    wholesale, as the device adapter does) plus :meth:`stats` /
+    :meth:`count_live`; :meth:`maintain` and :meth:`drain` default to
+    no-debt engines.
+    """
+
+    name: str = "engine"
+
+    def __init__(self):
+        self._counts = {k: 0 for k in OpKind}
+
+    # ------------------------------------------------------------------ apply
+    def apply(self, batch: OpBatch) -> OpResult:
+        n = len(batch)
+        found = np.zeros(n, bool)
+        values = np.full(n, -1, VAL_DTYPE)
+        range_hits: list = [None] * n
+        lat = np.zeros(n, np.float64)
+        for i in range(n):
+            kind = OpKind(int(batch.kinds[i]))
+            k = int(batch.keys[i])
+            if kind is OpKind.INSERT:
+                lat[i] = self._do_insert(k, int(batch.vals[i]))
+            elif kind is OpKind.DELETE:
+                lat[i] = self._do_delete(k)
+            elif kind is OpKind.QUERY:
+                found[i], values[i], lat[i] = self._do_query(k)
+            else:
+                rk, rv, lat[i] = self._do_range(k, int(batch.his[i]))
+                range_hits[i] = (rk, rv)
+            self._counts[kind] += 1
+        return OpResult(batch.kinds.copy(), found, values, range_hits, lat)
+
+    # ------------------------------------------------------------ scalar hooks
+    def _do_insert(self, key: int, val: int) -> float:
+        raise UnsupportedOp(f"{self.name} does not support INSERT")
+
+    def _do_delete(self, key: int) -> float:
+        raise UnsupportedOp(f"{self.name} does not support DELETE")
+
+    def _do_query(self, key: int):
+        raise UnsupportedOp(f"{self.name} does not support QUERY")
+
+    def _do_range(self, lo: int, hi: int):
+        raise UnsupportedOp(f"{self.name} does not support RANGE")
+
+    # ------------------------------------------------------------- maintenance
+    def maintain(self, budget: int = 1) -> int:
+        """Run up to ``budget`` units of deferred work; returns pending debt."""
+        return 0
+
+    def drain(self) -> None:
+        """Finish all deferred work (tests / shutdown)."""
+        while self.maintain(64):
+            pass
+
+    # ------------------------------------------------------------------- stats
+    @abc.abstractmethod
+    def io_time_s(self) -> float:
+        """Cumulative charged cost (O(1)) — the cheap per-step poll.
+
+        ``stats()`` carries the same number plus the full snapshot; use
+        this accessor in hot loops that only need the monotone cost.
+        """
+
+    @abc.abstractmethod
+    def height(self) -> int:
+        """Index height / level count (O(height)) — cheap, like io_time_s."""
+
+    @abc.abstractmethod
+    def stats(self) -> EngineStats:
+        """Full snapshot.  O(n): ``total_pairs`` is an exact logical count
+        (a complete scan of resident pairs), so poll sparingly — per run,
+        not per op; use :meth:`io_time_s` for cheap cost polling."""
+
+    @abc.abstractmethod
+    def count_live(self) -> int:
+        """Exact number of visible (non-deleted, deduplicated) keys.
+
+        Must not charge I/O cost — it is an observer, not an operation.
+        O(n): scans all resident pairs.
+        """
+
+
+# =========================================================== cost-model tiers
+class CostModelEngine(StorageEngine):
+    """Adapter base for the host tiers: scalar impl + explicit CostModel."""
+
+    clock = "sim"
+
+    def __init__(self, impl):
+        super().__init__()
+        self.impl = impl
+
+    @property
+    def cm(self) -> CostModel:
+        return self.impl.cm
+
+    def _do_insert(self, key, val):
+        return float(self.impl.insert(key, val))
+
+    def _do_delete(self, key):
+        return float(self.impl.delete(key))
+
+    def _do_query(self, key):
+        v, t = self.impl.query(key)
+        return v is not None, -1 if v is None else int(v), float(t)
+
+    def _do_range(self, lo, hi):
+        rk, rv = self.impl.range_query(lo, hi)
+        return rk, rv, float(self.impl._last_query_time)
+
+    def count_live(self) -> int:
+        # an all-keyspace range scan is exact on every host tier; snapshot
+        # and restore the cost counters so observation charges nothing.
+        cm = self.cm
+        saved = (cm.seeks, cm.bytes_read, cm.bytes_written, cm.pages)
+        try:
+            rk, _ = self.impl.range_query(0, int(np.iinfo(KEY_DTYPE).max))
+        finally:
+            cm.seeks, cm.bytes_read, cm.bytes_written, cm.pages = saved
+        return len(rk)
+
+    def height(self) -> int:
+        return 1
+
+    def _pending_debt(self) -> int:
+        return 0
+
+    def io_time_s(self) -> float:
+        return self.cm.time
+
+    def stats(self) -> EngineStats:
+        cm = self.cm
+        return EngineStats(
+            engine=self.name, clock=self.clock, io_time_s=cm.time,
+            io_seeks=cm.seeks, io_bytes_read=cm.bytes_read,
+            io_bytes_written=cm.bytes_written, height=self.height(),
+            total_pairs=self.count_live(),
+            physical_pairs=int(self.impl.total_pairs()),
+            pending_debt=self._pending_debt(),
+            n_inserts=self._counts[OpKind.INSERT],
+            n_deletes=self._counts[OpKind.DELETE],
+            n_queries=self._counts[OpKind.QUERY],
+            n_ranges=self._counts[OpKind.RANGE])
+
+
+class RefNBTreeEngine(CostModelEngine):
+    """The paper-faithful NB-tree (refimpl) under the protocol."""
+
+    name = "nbtree"
+
+    def __init__(self, f: int = 3, sigma: int = 4096, *, device: Device = HDD,
+                 **kw):
+        super().__init__(NBTree(f=f, sigma=sigma, device=device, **kw))
+
+    def maintain(self, budget: int = 1) -> int:
+        """Advance the pending cascade by up to ``budget`` page quanta."""
+        t = self.impl
+        if t._cascade is None:
+            return 0
+        try:
+            for _ in range(budget):
+                next(t._cascade)
+        except StopIteration:
+            t._cascade = None
+            t._frozen = None
+        return 0 if t._cascade is None else 1
+
+    def height(self) -> int:
+        return self.impl.height
+
+    def _pending_debt(self) -> int:
+        return 0 if self.impl._cascade is None else 1
+
+
+class LSMEngine(CostModelEngine):
+    name = "lsm"
+
+    def __init__(self, mem_pairs: int = 4096, ratio: int = 10, *,
+                 device: Device = HDD, **kw):
+        super().__init__(LSMTree(mem_pairs=mem_pairs, ratio=ratio,
+                                 device=device, **kw))
+
+    def height(self) -> int:
+        return len(self.impl.levels)
+
+
+class BTreeEngine(CostModelEngine):
+    """Incremental B+-tree (per-insert leaf read-modify-write)."""
+
+    name = "btree"
+
+    def __init__(self, *, device: Device = HDD, **kw):
+        super().__init__(BPlusTree(device=device, **kw))
+
+
+class BEpsilonEngine(CostModelEngine):
+    name = "bepsilon"
+
+    def __init__(self, *, fanout: int = 16, node_bytes: int = 4 << 20,
+                 cached_levels: int = 2, device: Device = HDD, **kw):
+        super().__init__(BEpsilonTree(fanout=fanout, node_bytes=node_bytes,
+                                      cached_levels=cached_levels,
+                                      device=device, **kw))
+
+    def height(self) -> int:
+        h, node = 0, self.impl.root
+        while not node.is_leaf:
+            node = node.children[0]
+            h += 1
+        return h
+
+
+class BulkBTreeEngine(CostModelEngine):
+    """Static bulk-loaded B+-tree: QUERY/RANGE only (the paper's yardstick)."""
+
+    name = "btree-bulk"
+
+    def __init__(self, keys, vals, *, device: Device = HDD, **kw):
+        super().__init__(BPlusTreeBulk(keys, vals, device=device, **kw))
+
+    def _do_insert(self, key, val):
+        raise UnsupportedOp("btree-bulk is static: INSERT unsupported")
+
+    def _do_delete(self, key):
+        raise UnsupportedOp("btree-bulk is static: DELETE unsupported")
+
+    def count_live(self) -> int:
+        return len(self.impl.keys)
+
+
+# ================================================================ device tier
+def _pad_pow2(a: np.ndarray) -> np.ndarray:
+    """Pad a 1-d array to the next power-of-two length by repeating a[-1]."""
+    n = len(a)
+    target = 1 << max(0, n - 1).bit_length()
+    if n in (0, target):
+        return a
+    return np.concatenate([a, np.repeat(a[-1:], target - n)])
+
+
+class DeviceNBTreeEngine(StorageEngine):
+    """The jax/Pallas device tier under the protocol.
+
+    ``apply`` groups maximal same-kind op runs into one fused device call
+    (sequential semantics preserved — see module docstring); latency is the
+    group's host wall-clock amortized over its ops, and ``stats().clock`` is
+    ``"wall"`` so drivers never mix it with simulated seconds.
+
+    Mixed workloads produce same-kind runs of arbitrary length, and the
+    fused device calls are shape-specialized jits — so every group is padded
+    to a power-of-two bucket to bound recompiles: QUERY/RANGE pads repeat
+    the last op and drop the extra outputs (read-only), INSERT/DELETE pads
+    repeat the last op verbatim, a blind re-write of the same (key, value)
+    that newest-wins dedup makes logically invisible (the physical duplicate
+    is retired at the next leaf compaction, like any stale copy).
+    """
+
+    name = "jax-nbtree"
+    clock = "wall"
+
+    def __init__(self, f: int = 4, sigma: int = 2048, *, max_nodes: int = 256,
+                 max_results: int = 512, **kw):
+        super().__init__()
+        from .jax_nbtree import NBTreeIndex, TOMBSTONE32  # jax import deferred
+        self._tombstone32 = TOMBSTONE32
+        self.idx = NBTreeIndex(f=f, sigma=sigma, max_nodes=max_nodes, **kw)
+        self._max_results = max_results
+        self._wall_s = 0.0
+
+    # ------------------------------------------------------------------ apply
+    def apply(self, batch: OpBatch) -> OpResult:
+        import jax
+
+        n = len(batch)
+        found = np.zeros(n, bool)
+        values = np.full(n, -1, VAL_DTYPE)
+        range_hits: list = [None] * n
+        truncated = np.zeros(n, bool)
+        lat = np.zeros(n, np.float64)
+        kinds = np.asarray(batch.kinds)
+        i = 0
+        while i < n:
+            j = i + 1
+            while j < n and kinds[j] == kinds[i]:
+                j += 1
+            kind = OpKind(int(kinds[i]))
+            sl = slice(i, j)
+            real = j - i
+            t0 = time.perf_counter()
+            if kind is OpKind.INSERT:
+                self.idx.insert_batch(
+                    _pad_pow2(batch.keys[sl].astype(np.uint32)),
+                    _pad_pow2(batch.vals[sl].astype(np.int32)))
+                jax.block_until_ready(self.idx.run_keys)
+            elif kind is OpKind.DELETE:
+                self.idx.delete_batch(_pad_pow2(batch.keys[sl].astype(np.uint32)))
+                jax.block_until_ready(self.idx.run_keys)
+            elif kind is OpKind.QUERY:
+                pres, vals = self.idx.query_batch(
+                    _pad_pow2(batch.keys[sl].astype(np.uint32)))
+                pres = np.asarray(pres)[:real]
+                vals = np.asarray(vals)[:real]
+                found[sl] = pres
+                values[sl] = np.where(pres, vals.astype(np.int64), -1)
+            else:
+                self._apply_ranges(batch, sl, range_hits, truncated)
+            dt = time.perf_counter() - t0
+            self._wall_s += dt
+            lat[sl] = dt / (j - i)
+            self._counts[kind] += j - i
+            i = j
+        return OpResult(kinds.copy(), found, values, range_hits, lat,
+                        truncated)
+
+    def _apply_ranges(self, batch: OpBatch, sl: slice, range_hits: list,
+                      truncated: np.ndarray) -> None:
+        los = _pad_pow2(batch.keys[sl].astype(np.uint32))
+        his = _pad_pow2(batch.his[sl].astype(np.uint32))
+        while True:
+            rk, rv, cnt, trunc = self.idx.range_query_batch(
+                los, his, max_results=self._max_results)
+            trunc = np.asarray(trunc)
+            if not trunc.any() or self._max_results >= (1 << 20):
+                break
+            self._max_results *= 2      # sticky: later batches start larger
+        rk, rv, cnt = np.asarray(rk), np.asarray(rv), np.asarray(cnt)
+        for b in range(sl.stop - sl.start):
+            c = int(cnt[b])
+            range_hits[sl.start + b] = (rk[b, :c].astype(KEY_DTYPE),
+                                        rv[b, :c].astype(VAL_DTYPE))
+            truncated[sl.start + b] = bool(trunc[b])
+
+    # ------------------------------------------------------------- maintenance
+    def maintain(self, budget: int = 1) -> int:
+        t0 = time.perf_counter()
+        pending = self.idx.maintain(budget)
+        self._wall_s += time.perf_counter() - t0
+        return pending
+
+    def drain(self) -> None:
+        t0 = time.perf_counter()
+        self.idx.drain()
+        self._wall_s += time.perf_counter() - t0
+
+    # ------------------------------------------------------------------- stats
+    def count_live(self) -> int:
+        run_keys = np.asarray(self.idx.run_keys)
+        run_vals = np.asarray(self.idx.run_vals)
+        seen: dict = {}
+
+        # pre-order (ancestors first) + leftmost-first within a run is the
+        # freshest-copy-wins order both query paths resolve by.
+        def rec(node):
+            ks = run_keys[node.nid][: node.count]
+            vs = run_vals[node.nid][: node.count]
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                if k not in seen:
+                    seen[k] = v
+            for c in node.children:
+                rec(c)
+
+        rec(self.idx.root)
+        return sum(1 for v in seen.values() if v != self._tombstone32)
+
+    def io_time_s(self) -> float:
+        return self._wall_s
+
+    def height(self) -> int:
+        return self.idx.height
+
+    def stats(self) -> EngineStats:
+        return EngineStats(
+            engine=self.name, clock=self.clock, io_time_s=self._wall_s,
+            io_seeks=0, io_bytes_read=0, io_bytes_written=0,
+            height=self.height(), total_pairs=self.count_live(),
+            physical_pairs=int(self.idx.total_pairs()),
+            pending_debt=len(self.idx._pending),
+            n_inserts=self._counts[OpKind.INSERT],
+            n_deletes=self._counts[OpKind.DELETE],
+            n_queries=self._counts[OpKind.QUERY],
+            n_ranges=self._counts[OpKind.RANGE])
+
+
+# =================================================================== registry
+_REGISTRY: dict = {}
+
+#: the paper's comparison set — one engine per tier, every benchmark's axis.
+FIVE_TIERS = ("nbtree", "lsm", "btree", "bepsilon", "jax-nbtree")
+
+
+def register_engine(name: str, factory) -> None:
+    assert name not in _REGISTRY, f"duplicate engine name {name!r}"
+    _REGISTRY[name] = factory
+
+
+def make_engine(name: str, **kw) -> StorageEngine:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+    eng = factory(**kw)
+    eng.name = name
+    return eng
+
+
+def available_engines() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+register_engine("nbtree", RefNBTreeEngine)
+register_engine("nbtree-basic",
+                lambda **kw: RefNBTreeEngine(deamortize=False, **kw))
+register_engine("nbtree-nobloom",
+                lambda **kw: RefNBTreeEngine(use_bloom=False, **kw))
+register_engine("lsm", LSMEngine)
+register_engine("blsm", lambda **kw: LSMEngine(**{"max_levels": 3, **kw}))
+register_engine("btree", BTreeEngine)
+register_engine("bepsilon", BEpsilonEngine)
+register_engine("jax-nbtree", DeviceNBTreeEngine)

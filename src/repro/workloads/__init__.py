@@ -1,0 +1,16 @@
+"""Deterministic mixed-workload subsystem (DESIGN.md §5).
+
+``generator`` turns a named mix (insert-heavy, point-read-heavy,
+range-heavy, YCSB-A/B/E-style blends, delete-churn) plus a key
+distribution (uniform or zipfian) into a reproducible stream of
+``OpBatch``es; ``driver`` streams any such workload through any registered
+``StorageEngine`` and records per-op latency/cost histograms with
+p50/p99/p100 — the measurement harness of Luo & Carey's LSM evaluations,
+transplanted to the paper's five tiers.
+"""
+from .generator import MIXES, Workload, WorkloadSpec, make_workload
+
+# NOTE: ``driver`` is intentionally not re-exported here — importing it at
+# package level would shadow ``python -m repro.workloads.driver`` (runpy's
+# sys.modules warning).  Import ``repro.workloads.driver`` directly.
+__all__ = ["MIXES", "Workload", "WorkloadSpec", "make_workload"]

@@ -1,0 +1,172 @@
+"""Workload driver: stream any mix through any registered engine.
+
+``run_workload(engine, workload)`` applies the preload then the mixed
+stream batch by batch, calling ``engine.maintain(budget)`` between batches
+(the serving-loop deamortization knob), and records per-op latencies into
+per-kind :class:`LatencyHistogram`s.  The report carries p50/p99/p100/mean
+per kind, the histogram buckets, and the engine's final ``stats()``
+snapshot — everything ``benchmarks/fig_mixed.py`` and the CI smoke job
+need, in JSON-ready form.
+
+CLI (used by the CI benchmark-smoke job)::
+
+    PYTHONPATH=src python -m repro.workloads.driver \
+        --engines all --mix ycsb-a --ops 512 --batch 64 --out runs/mixed.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.engine_api import (FIVE_TIERS, OpKind, StorageEngine,
+                                   available_engines, make_engine)
+
+from .generator import MIXES, Workload, make_workload
+
+
+class LatencyHistogram:
+    """Log-spaced latency histogram with exact sample percentiles.
+
+    Buckets span 1 ns .. ~1000 s at 4 buckets/decade (JSON-friendly for
+    artifacts); out-of-range samples are clamped into the edge buckets
+    (zero-cost ops — e.g. buffered sim-tier inserts — land in the first
+    bucket) so ``sum(bucket_counts) == count`` always holds; percentiles
+    are computed from the retained raw samples, so p50/p99/p100 are
+    exact, not bucket-resolution estimates.
+    """
+
+    EDGES = np.logspace(-9, 3, 49)          # seconds
+
+    def __init__(self):
+        self.samples: list = []
+
+    def add(self, latencies_s) -> None:
+        lat = np.asarray(latencies_s, np.float64)
+        if lat.size:
+            self.samples.append(lat)
+
+    @property
+    def _all(self) -> np.ndarray:
+        return (np.concatenate(self.samples) if self.samples
+                else np.empty(0, np.float64))
+
+    def percentile(self, q: float) -> float:
+        a = self._all
+        return float(np.percentile(a, q)) if a.size else 0.0
+
+    def to_dict(self) -> dict:
+        a = self._all
+        counts = (np.histogram(np.clip(a, self.EDGES[0], self.EDGES[-1]),
+                               self.EDGES)[0] if a.size
+                  else np.zeros(len(self.EDGES) - 1, int))
+        return {
+            "count": int(a.size),
+            "mean_s": float(a.mean()) if a.size else 0.0,
+            "p50_s": self.percentile(50),
+            "p99_s": self.percentile(99),
+            "p100_s": self.percentile(100),
+            "bucket_edges_s": [float(e) for e in self.EDGES],
+            "bucket_counts": [int(c) for c in counts],
+        }
+
+
+def run_workload(engine: StorageEngine, workload: Workload, *,
+                 maintain_budget: int = 1) -> dict:
+    """Drive ``workload`` through ``engine``; returns the JSON-ready report."""
+    spec = workload.spec
+    hists = {k: LatencyHistogram() for k in OpKind}
+
+    pre = workload.preload_batch()
+    engine.apply(pre)
+    engine.drain()
+    io_after_preload = engine.io_time_s()
+
+    max_debt = 0
+    for batch in workload.batches():
+        res = engine.apply(batch)
+        for k in OpKind:
+            hists[k].add(res.latencies(k))
+        max_debt = max(max_debt, engine.maintain(maintain_budget))
+    debt_before_drain = engine.maintain(0)
+    engine.drain()
+
+    stats = engine.stats()
+    return {
+        "engine": engine.name,
+        "workload": dataclasses.asdict(spec) | {
+            "mix": {OpKind(k).name.lower(): p for k, p in spec.mix.items()}},
+        "maintain_budget": maintain_budget,
+        "preload_pairs": len(pre),
+        "io_time_preload_s": io_after_preload,
+        "max_pending_debt": int(max_debt),
+        "pending_debt_before_drain": int(debt_before_drain),
+        "per_kind": {OpKind(k).name.lower(): h.to_dict()
+                     for k, h in hists.items() if h.samples},
+        "stats": dataclasses.asdict(stats),
+    }
+
+
+# ---------------------------------------------------------------- CLI harness
+_SMALL_CONFIGS = {
+    # tiny-footprint constructor kwargs for smoke runs (CI, demos).
+    "nbtree": dict(f=3, sigma=1024),
+    "nbtree-basic": dict(f=3, sigma=1024),
+    "nbtree-nobloom": dict(f=3, sigma=1024),
+    "lsm": dict(mem_pairs=1024),
+    "blsm": dict(mem_pairs=1024),
+    "btree": {},
+    "bepsilon": dict(node_bytes=1 << 16, cached_levels=1),
+    "jax-nbtree": dict(f=4, sigma=512, max_nodes=256),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engines", nargs="+", default=["all"],
+                    help="engine names, or 'all' for the five paper tiers "
+                         f"({', '.join(FIVE_TIERS)}); registered: "
+                         f"{', '.join(available_engines())}")
+    ap.add_argument("--mix", default="ycsb-a", choices=sorted(MIXES))
+    ap.add_argument("--ops", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--preload", type=int, default=2048)
+    ap.add_argument("--key-space", type=int, default=1 << 20)
+    ap.add_argument("--dist", choices=("uniform", "zipfian"), default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--maintain-budget", type=int, default=1)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    names = FIVE_TIERS if args.engines == ["all"] else tuple(args.engines)
+    overrides = dict(n_ops=args.ops, batch_size=args.batch,
+                     preload=args.preload, key_space=args.key_space,
+                     seed=args.seed)
+    if args.dist:
+        overrides["dist"] = args.dist
+
+    reports = []
+    for name in names:
+        engine = make_engine(name, **_SMALL_CONFIGS.get(name, {}))
+        report = run_workload(engine, make_workload(args.mix, **overrides),
+                              maintain_budget=args.maintain_budget)
+        reports.append(report)
+        pk = report["per_kind"]
+        line = " ".join(
+            f"{kind}[p50={h['p50_s']*1e3:.3f}ms p99={h['p99_s']*1e3:.3f}ms "
+            f"p100={h['p100_s']*1e3:.3f}ms]" for kind, h in pk.items())
+        print(f"{name:>14} ({report['stats']['clock']}) {args.mix}: {line} "
+              f"pairs={report['stats']['total_pairs']}")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"mix": args.mix, "reports": reports}, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Deterministic workload-mix generator (YCSB-style, paper-tier portable).
+
+A :class:`WorkloadSpec` names an operation mix (per-kind probabilities), a
+key distribution (uniform or zipfian over a bounded key space), a range
+selectivity, and sizes; :class:`Workload` expands it into a reproducible
+stream of :class:`~repro.core.engine_api.OpBatch` — the same stream for
+every engine, which is what makes cross-tier comparisons and conformance
+tests meaningful.
+
+Portability constraints (see ``engine_api`` module docstring): generated
+keys live in ``[1, key_space]`` with ``key_space + range span < 2^31`` so
+the uint32 device tier and the uint64 cost-model tiers see identical keys,
+and values are an increasing non-negative counter below 2^31 (int32-safe,
+never a tombstone sentinel) so freshest-copy-wins is observable.
+
+Zipfian draws use the continuous bounded power-law inverse CDF
+(rank = ((u*(N^{1-θ}-1))+1)^{1/(1-θ)}, the standard smooth approximation of
+YCSB's ZipfianGenerator) and scatter ranks over the key space with a
+splitmix64 mix so hot keys are not clustered at one end of the key space —
+hot *ranks*, arbitrary *keys*, as in YCSB's hashed key order.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine_api import OpBatch, OpKind
+
+#: named operation mixes (probabilities per op kind).
+MIXES: dict = {
+    # the paper's own regime: ingestion-dominated with occasional reads.
+    "insert-heavy":    {OpKind.INSERT: 0.95, OpKind.QUERY: 0.05},
+    "point-read-heavy": {OpKind.INSERT: 0.05, OpKind.QUERY: 0.95},
+    "range-heavy":     {OpKind.INSERT: 0.05, OpKind.RANGE: 0.95},
+    # YCSB-style blends (A: update-heavy, B: read-mostly, E: short scans);
+    # updates are inserts on existing keys (blind writes), as in YCSB.
+    "ycsb-a":          {OpKind.INSERT: 0.50, OpKind.QUERY: 0.50},
+    "ycsb-b":          {OpKind.INSERT: 0.05, OpKind.QUERY: 0.95},
+    "ycsb-e":          {OpKind.INSERT: 0.05, OpKind.RANGE: 0.95},
+    # tombstone churn: exercises delta-record deletion on every tier.
+    "delete-churn":    {OpKind.INSERT: 0.45, OpKind.DELETE: 0.25,
+                        OpKind.QUERY: 0.25, OpKind.RANGE: 0.05},
+}
+
+#: mixes that default to a skewed key distribution (YCSB's default).
+_ZIPF_BY_DEFAULT = ("ycsb-a", "ycsb-b", "ycsb-e")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    mix: dict                      # OpKind -> probability, sums to 1
+    dist: str = "uniform"          # "uniform" | "zipfian"
+    theta: float = 0.8             # zipfian skew (0 = uniform, <1)
+    key_space: int = 1 << 24       # keys drawn from [1, key_space]
+    range_selectivity: float = 1e-3
+    preload: int = 4096            # distinct keys loaded before the mix runs
+    n_ops: int = 8192
+    batch_size: int = 256
+    seed: int = 0
+    #: emit each batch's ops grouped by kind (INSERT, DELETE, QUERY, RANGE).
+    #: The stream stays mixed *across* batches and sequential semantics are
+    #: untouched; within a batch, grouping turns ~batch_size/2 tiny
+    #: same-kind runs into <= 4 large ones, which is what lets the device
+    #: tier serve a batch in <= 4 fused shape-bucketed calls instead of
+    #: recompiling per run length.  Set False for interleaving stress tests.
+    group_kinds: bool = True
+
+    def __post_init__(self):
+        total = sum(self.mix.values())
+        assert abs(total - 1.0) < 1e-9, f"mix must sum to 1, got {total}"
+        span = self.range_span
+        assert self.key_space + span < (1 << 31), \
+            "key_space + range span must stay below 2^31 (uint32 device tier)"
+        assert 0.0 <= self.theta < 1.0
+
+    @property
+    def range_span(self) -> int:
+        return max(1, int(self.key_space * self.range_selectivity))
+
+
+def make_workload(mix_name: str, **overrides) -> "Workload":
+    """Build a workload from a named mix; keyword overrides win."""
+    mix = MIXES[mix_name]
+    if mix_name in _ZIPF_BY_DEFAULT:
+        overrides.setdefault("dist", "zipfian")
+    return Workload(WorkloadSpec(name=mix_name, mix=mix, **overrides))
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (uint64 wraparound arithmetic)."""
+    x = x.astype(np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+class Workload:
+    """Expands a :class:`WorkloadSpec` into deterministic OpBatch streams."""
+
+    def __init__(self, spec: WorkloadSpec):
+        self.spec = spec
+
+    # ---------------------------------------------------------------- key draw
+    def _draw_keys(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        space = self.spec.key_space
+        if self.spec.dist == "zipfian" and self.spec.theta > 0.0:
+            u = rng.random(n)
+            g = 1.0 - self.spec.theta
+            ranks = ((u * (float(space) ** g - 1.0)) + 1.0) ** (1.0 / g)
+            ranks = np.minimum(ranks.astype(np.uint64), np.uint64(space)) - 1
+            # scatter hot ranks over the key space (YCSB hashed key order).
+            return (_splitmix64(ranks) % np.uint64(space)) + np.uint64(1)
+        return rng.integers(1, space + 1, n, dtype=np.uint64)
+
+    # ---------------------------------------------------------------- preload
+    def preload_batch(self) -> OpBatch:
+        """Distinct-key initial load (YCSB load phase), deterministic."""
+        spec = self.spec
+        keys = (_splitmix64(np.arange(spec.preload, dtype=np.uint64))
+                % np.uint64(spec.key_space)) + np.uint64(1)
+        keys = np.unique(keys)[: spec.preload]       # drop rare collisions
+        vals = np.arange(1, len(keys) + 1, dtype=np.int64)
+        return OpBatch.inserts(keys, vals)
+
+    # ----------------------------------------------------------------- stream
+    def batches(self):
+        """Yield the mixed-op stream, ``batch_size`` ops per OpBatch."""
+        spec = self.spec
+        rng = np.random.default_rng(spec.seed)
+        kinds_pool = np.array([int(k) for k in spec.mix], np.int8)
+        probs = np.array([spec.mix[OpKind(int(k))] for k in kinds_pool])
+        val_counter = spec.preload + 1
+        emitted = 0
+        while emitted < spec.n_ops:
+            b = min(spec.batch_size, spec.n_ops - emitted)
+            kinds = rng.choice(kinds_pool, b, p=probs).astype(np.int8)
+            if spec.group_kinds:
+                kinds = kinds[np.argsort(kinds, kind="stable")]
+            keys = self._draw_keys(rng, b)
+            vals = np.zeros(b, np.int64)
+            his = np.zeros(b, np.uint64)
+            ins = kinds == int(OpKind.INSERT)
+            n_ins = int(ins.sum())
+            # increasing int32-safe values: freshest-wins is observable and
+            # both value widths (int64 host / int32 device) agree.
+            vals[ins] = (np.arange(val_counter, val_counter + n_ins)
+                         % ((1 << 31) - 1))
+            val_counter += n_ins
+            rng_mask = kinds == int(OpKind.RANGE)
+            his[rng_mask] = keys[rng_mask] + np.uint64(spec.range_span)
+            yield OpBatch(kinds, keys, vals, his)
+            emitted += b

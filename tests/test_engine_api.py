@@ -1,0 +1,201 @@
+"""Engine-conformance suite for the unified StorageEngine API (DESIGN.md §5).
+
+One deterministic mixed op-stream (insert / delete / query / range with
+maintain interleavings) is generated once by the workload subsystem and
+replayed through every registered tier; each engine's visible results must
+match the sorted-dict oracle op for op — which makes all five tiers
+pairwise identical by transitivity.  The same pass asserts the stats()
+contract: charged I/O cost never decreases across apply/maintain/drain,
+and after drain() the logical live-pair count equals the oracle's.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine_api import (FIVE_TIERS, EngineStats, OpBatch, OpKind,
+                                   UnsupportedOp, available_engines,
+                                   make_engine)
+from repro.workloads import MIXES, make_workload
+from repro.workloads.driver import run_workload
+
+#: small-footprint configs so the device tier stays CI-sized.
+CONFIGS = {
+    "nbtree": dict(f=3, sigma=256),
+    "lsm": dict(mem_pairs=256),
+    "btree": {},
+    "bepsilon": dict(node_bytes=1 << 14, cached_levels=1),
+    "jax-nbtree": dict(f=4, sigma=256, max_nodes=256),
+}
+
+
+def _workload(**overrides):
+    kw = dict(key_space=4096, n_ops=512, batch_size=128, preload=256,
+              range_selectivity=0.01, seed=3)
+    kw.update(overrides)
+    return make_workload("delete-churn", **kw)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    """(preload, batches, per-op oracle expectations, final live count)."""
+    wl = _workload()
+    pre = wl.preload_batch()
+    batches = list(wl.batches())
+    model = dict(zip(pre.keys.tolist(), pre.vals.tolist()))
+    expected = []
+    for b in batches:
+        exp = []
+        for i in range(len(b)):
+            kind = OpKind(int(b.kinds[i]))
+            k = int(b.keys[i])
+            if kind is OpKind.INSERT:
+                model[k] = int(b.vals[i])
+                exp.append(None)
+            elif kind is OpKind.DELETE:
+                model.pop(k, None)
+                exp.append(None)
+            elif kind is OpKind.QUERY:
+                exp.append(model.get(k))
+            else:
+                hi = int(b.his[i])
+                ks = sorted(x for x in model if k <= x <= hi)
+                exp.append((ks, [model[x] for x in ks]))
+        expected.append(exp)
+    return pre, batches, expected, len(model)
+
+
+@pytest.mark.parametrize("name", FIVE_TIERS)
+def test_engine_conformance(name, stream):
+    pre, batches, expected, n_live = stream
+    eng = make_engine(name, **CONFIGS[name])
+    eng.apply(pre)
+    eng.drain()
+    last_io = eng.io_time_s()
+
+    for bi, (b, exp) in enumerate(zip(batches, expected)):
+        res = eng.apply(b)
+        assert not res.range_truncated.any(), (name, bi)
+        for i in range(len(b)):
+            kind = OpKind(int(b.kinds[i]))
+            if kind is OpKind.QUERY:
+                want = exp[i]
+                assert bool(res.found[i]) == (want is not None), (name, bi, i)
+                if want is not None:
+                    assert int(res.values[i]) == want, (name, bi, i)
+            elif kind is OpKind.RANGE:
+                rk, rv = res.range_hits[i]
+                assert rk.tolist() == exp[i][0], (name, bi, i)
+                assert rv.tolist() == exp[i][1], (name, bi, i)
+        eng.maintain(2)
+        io = eng.io_time_s()            # charged cost must never decrease
+        assert io >= last_io, (name, bi)
+        last_io = io
+
+    eng.drain()
+    s = eng.stats()
+    assert s.io_time_s >= last_io, name
+    assert s.total_pairs == n_live, (name, s.total_pairs, n_live)
+    assert s.pending_debt == 0, name
+    assert s.physical_pairs >= s.total_pairs, name
+    assert s.n_inserts + s.n_deletes + s.n_queries + s.n_ranges \
+        == len(pre) + sum(len(b) for b in batches), name
+
+
+def test_stats_snapshot_shape():
+    eng = make_engine("lsm", mem_pairs=64)
+    eng.apply(OpBatch.inserts(np.arange(1, 33, dtype=np.uint64),
+                              np.arange(32, dtype=np.int64)))
+    s = eng.stats()
+    assert isinstance(s, EngineStats)
+    assert s.engine == "lsm" and s.clock == "sim"
+    assert s.n_inserts == 32 and s.total_pairs == 32
+
+
+def test_maintain_budget_bounds_debt():
+    """refimpl cascade: bounded maintain() leaves debt, drain() clears it."""
+    eng = make_engine("nbtree", f=3, sigma=64)
+    keys = np.random.default_rng(0).permutation(
+        np.arange(1, 200, dtype=np.uint64))
+    eng.apply(OpBatch.inserts(keys, np.arange(len(keys), dtype=np.int64)))
+    # one page quantum at a time: debt must stay visible until exhausted.
+    seen_debt = eng.stats().pending_debt
+    for _ in range(10_000):
+        if eng.maintain(1) == 0:
+            break
+    assert eng.maintain(1) == 0
+    assert eng.stats().pending_debt == 0
+    assert seen_debt in (0, 1)
+    eng.drain()   # idempotent
+
+
+def test_registry_and_unsupported_ops():
+    assert set(FIVE_TIERS) <= set(available_engines())
+    with pytest.raises(KeyError):
+        make_engine("no-such-engine")
+    from repro.core.engine_api import BulkBTreeEngine
+    bulk = BulkBTreeEngine(np.arange(1, 9, dtype=np.uint64),
+                           np.arange(8, dtype=np.int64))
+    with pytest.raises(UnsupportedOp):
+        bulk.apply(OpBatch.inserts([1], [1]))
+    res = bulk.apply(OpBatch.queries([1, 100]))
+    assert res.found.tolist() == [True, False]
+
+
+def test_opbatch_validation_and_concat():
+    with pytest.raises(AssertionError):
+        OpBatch(np.zeros(2, np.int8), np.zeros(3, np.uint64),
+                np.zeros(2, np.int64), np.zeros(2, np.uint64))
+    b = OpBatch.concat([OpBatch.inserts([1, 2], [10, 20]),
+                        OpBatch.ranges([0], [5])])
+    assert len(b) == 3
+    assert b.kinds.tolist() == [OpKind.INSERT, OpKind.INSERT, OpKind.RANGE]
+    assert int(b.his[2]) == 5
+
+
+def test_workload_generator_deterministic():
+    a = [b for b in _workload().batches()]
+    c = [b for b in _workload().batches()]
+    for x, y in zip(a, c):
+        assert np.array_equal(x.kinds, y.kinds)
+        assert np.array_equal(x.keys, y.keys)
+        assert np.array_equal(x.vals, y.vals)
+        assert np.array_equal(x.his, y.his)
+    d = [b for b in _workload(seed=4).batches()]
+    assert any(not np.array_equal(x.keys, y.keys) for x, y in zip(a, d))
+
+
+def test_workload_zipfian_is_skewed():
+    wl = make_workload("ycsb-b", key_space=1 << 16, n_ops=4096,
+                       batch_size=512, theta=0.9)
+    assert wl.spec.dist == "zipfian"
+    keys = np.concatenate([b.keys for b in wl.batches()])
+    _, counts = np.unique(keys, return_counts=True)
+    top = np.sort(counts)[::-1]
+    # hot keys dominate: the top 1% of distinct keys draw >10% of accesses
+    # (a uniform draw gives ~1%).
+    frac = top[: max(1, len(top) // 100)].sum() / counts.sum()
+    assert frac > 0.10, frac
+
+
+def test_all_mixes_generate():
+    for mix in MIXES:
+        wl = make_workload(mix, key_space=1 << 12, n_ops=64, batch_size=32,
+                           preload=16)
+        batches = list(wl.batches())
+        assert sum(len(b) for b in batches) == 64, mix
+        kinds = {OpKind(int(k)) for b in batches for k in b.kinds}
+        assert kinds <= set(wl.spec.mix), mix
+
+
+def test_driver_report_structure():
+    wl = make_workload("delete-churn", key_space=1 << 12, n_ops=256,
+                       batch_size=64, preload=64)
+    rep = run_workload(make_engine("lsm", mem_pairs=128), wl,
+                       maintain_budget=2)
+    assert rep["engine"] == "lsm"
+    assert rep["stats"]["pending_debt"] == 0
+    counts = {k: v["count"] for k, v in rep["per_kind"].items()}
+    assert sum(counts.values()) == 256
+    for h in rep["per_kind"].values():
+        assert h["p50_s"] <= h["p99_s"] <= h["p100_s"]
+        assert sum(h["bucket_counts"]) == h["count"]  # clamped, none dropped
+        assert len(h["bucket_counts"]) == len(h["bucket_edges_s"]) - 1

@@ -1,0 +1,154 @@
+"""Shard-count scaling sweep: throughput up, worst-case delay bounded.
+
+The paper's headline is a consistently high insertion rate with *bounded
+worst-case delay* on one engine; the ROADMAP north star is a sharded
+serving system.  This scenario measures whether the sharded layer
+(DESIGN.md §6) preserves both claims at scale-out: an insert-heavy
+workload is streamed through ``sharded:<tier>`` ensembles of 1..16 shards,
+reporting
+
+* **aggregate insert throughput** — total ops over the parallel makespan
+  (shards own independent cost models, so the ensemble's elapsed time is
+  the *max* per-shard charged time, not the sum), and
+* **p100 insert delay** — the worst single foreground op anywhere in the
+  ensemble, which the cross-shard maintenance scheduler must keep at the
+  single-shard bound (the Luo & Carey stall-at-scale-out failure mode).
+
+Expected shape: throughput grows with shard count for the NB-tree tier
+while p100 stays within 2x of the single-shard bound; every sim tier ends
+with identical live pairs at every shard count (differential check).  The
+device tier runs host-sequentially (wall clock), so its rows demonstrate
+protocol + debt bounds, not parallel speedup.
+
+Standalone CLI (CI bench-smoke)::
+
+    PYTHONPATH=src python -m benchmarks.fig_scaling --quick \
+        --out runs/fig_scaling.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.engine_api import make_engine
+from repro.workloads import make_workload
+from repro.workloads.driver import SCHEMA_VERSION, run_workload
+
+KEY_SPACE = 1 << 20
+
+#: per-shard configs sized so maintenance actually fires inside the
+#: measured phase even at 16 shards (sigma well below n_ops / shards).
+CONFIGS = {
+    "nbtree": dict(f=3, sigma=512),
+    "lsm": dict(mem_pairs=512),
+    "btree": {},
+    "bepsilon": dict(node_bytes=1 << 16, cached_levels=1),
+    "jax-nbtree": dict(f=4, sigma=256, max_nodes=256),
+}
+
+#: the wall-clock device tier runs shards host-sequentially; cap its sweep.
+_DEVICE_COUNTS = (1, 4)
+
+#: one source of truth for the smoke-sized sweep (this module's --quick and
+#: benchmarks/run.py --quick must produce comparable artifacts).
+QUICK_KWARGS = dict(tiers=("nbtree", "lsm"), shard_counts=(1, 2, 4),
+                    n_ops=1024, batch=128, preload=1024)
+
+
+def _make(tier: str, n_shards: int):
+    if n_shards == 1:
+        return make_engine(tier, **CONFIGS[tier])
+    return make_engine(f"sharded:{tier}", shards=n_shards, **CONFIGS[tier])
+
+
+def _makespan(engine) -> float:
+    """Ensemble elapsed charged time: max over parallel shards."""
+    times = engine.shard_io_times() if hasattr(engine, "shard_io_times") \
+        else [engine.io_time_s()]
+    return max(max(times, default=0.0), 1e-9)
+
+
+def run(tiers=("nbtree", "lsm", "bepsilon", "jax-nbtree"),
+        shard_counts=(1, 2, 4, 8, 16), n_ops: int = 4096, batch: int = 256,
+        preload: int = 4096, mix: str = "insert-heavy"):
+    rows = []
+    for tier in tiers:
+        for n_shards in shard_counts:
+            if tier == "jax-nbtree" and n_shards not in _DEVICE_COUNTS:
+                continue
+            engine = _make(tier, n_shards)
+            wl = make_workload(mix, key_space=KEY_SPACE, n_ops=n_ops,
+                               batch_size=batch, preload=preload)
+            report = run_workload(engine, wl, maintain_budget=2)
+            st = report["stats"]
+            ins = report["per_kind"].get("insert", {})
+            n_ins = st["n_inserts"]
+            rows.append(dict(
+                fig="scaling", index=tier, shards_req=n_shards,
+                shards=st["shards"], mix=mix, clock=st["clock"],
+                n_ops=n_ops,
+                throughput_kops=n_ins / _makespan(engine) / 1e3,
+                insert_p50_ms=ins.get("p50_s", 0.0) * 1e3,
+                insert_p100_ms=ins.get("p100_s", 0.0) * 1e3,
+                pending_debt=st["pending_debt"],
+                live_pairs=st["total_pairs"]))
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    sim = [r for r in rows if r["clock"] == "sim"]
+    # differential: every sim tier at every shard count ends with the same
+    # visible state from the one shared stream.
+    pairs = {r["live_pairs"] for r in sim}
+    tag = "matches paper" if len(pairs) == 1 else "MISMATCH"
+    out.append(f"scaling: all sim tiers/shard counts agree on live pairs "
+               f"({sorted(pairs)})  [{tag}]")
+    nb = sorted((r for r in rows if r["index"] == "nbtree"),
+                key=lambda r: r["shards_req"])
+    if nb:
+        base = nb[0]
+        grows = all(b["throughput_kops"] >= a["throughput_kops"] * 0.9
+                    for a, b in zip(nb, nb[1:]))
+        speedup = nb[-1]["throughput_kops"] / max(base["throughput_kops"],
+                                                  1e-12)
+        tag = ("matches paper" if grows and speedup > 1.5 else "MISMATCH")
+        out.append(f"scaling nbtree: aggregate insert throughput grows with "
+                   f"shard count ({speedup:.1f}x at {nb[-1]['shards_req']} "
+                   f"shards)  [{tag}]")
+        bound = max(base["insert_p100_ms"], 1e-9)
+        worst = max(r["insert_p100_ms"] / bound for r in nb)
+        tag = "matches paper" if worst <= 2.0 else "MISMATCH"
+        out.append(f"scaling nbtree: ensemble p100 insert delay stays within "
+                   f"2x of the single-shard bound (worst {worst:.2f}x)  "
+                   f"[{tag}]")
+    # the scheduler leaves no unpaid debt anywhere after drain.
+    tag = ("matches paper" if all(r["pending_debt"] == 0 for r in rows)
+           else "MISMATCH")
+    out.append(f"scaling: zero pending debt after drain on every row  [{tag}]")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI smoke)")
+    ap.add_argument("--out", default="runs/fig_scaling.json")
+    args = ap.parse_args(argv)
+    kwargs = QUICK_KWARGS if args.quick else {}
+    rows = run(**kwargs)
+    checks = check(rows)
+    for r in rows:
+        print(r)
+    for c in checks:
+        print(" ->", c)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"schema_version": SCHEMA_VERSION, "rows": rows,
+                   "checks": checks}, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import time
 
 from . import (bench_engine, bench_kernels, fig4_fanout, fig5_dtree_size,
                fig67_insertion, fig89_query, fig_mixed, fig_range,
-               table2_theory)
+               fig_scaling, table2_theory)
 
 SUITES = [
     ("fig4_fanout (Fig 4a/4b)", fig4_fanout),
@@ -21,6 +21,7 @@ SUITES = [
     ("fig89_query (Figs 8,9)", fig89_query),
     ("fig_range (range scans)", fig_range),
     ("fig_mixed (mixed workloads)", fig_mixed),
+    ("fig_scaling (sharded scale-out)", fig_scaling),
     ("table2_theory (Table 2)", table2_theory),
     ("bench_kernels (Pallas)", bench_kernels),
     ("bench_engine (serving)", bench_engine),
@@ -48,6 +49,8 @@ def main() -> None:
             kwargs = {"sizes": (20_000,), "n_q": 8}
         elif args.quick and mod is fig_mixed:
             kwargs = {"mixes": ("ycsb-a",), "n_ops": 1024, "preload": 1024}
+        elif args.quick and mod is fig_scaling:
+            kwargs = fig_scaling.QUICK_KWARGS
         elif args.quick and mod is table2_theory:
             kwargs = {"sizes": (10_000, 30_000, 90_000)}
         rows = mod.run(**kwargs)

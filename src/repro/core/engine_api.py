@@ -18,7 +18,9 @@ answers.  This module is that surface:
   device-tier ``jax_nbtree.NBTreeIndex``) onto the protocol, keeping the
   existing classes as the implementation core;
 * an engine registry (:func:`register_engine` / :func:`make_engine`), with
-  :data:`FIVE_TIERS` naming the paper's comparison set.
+  :data:`FIVE_TIERS` naming the paper's comparison set; the
+  ``sharded:<base>`` prefix builds a range-partitioned ensemble of any
+  registered engine (``repro.shard``, DESIGN.md §6).
 
 Semantics are sequential within a batch: op i+1 observes op i.  Adapters
 may still vectorize — the device adapter groups maximal same-kind runs into
@@ -114,8 +116,19 @@ class OpBatch:
                        np.zeros(len(los), VAL_DTYPE), np.asarray(his, KEY_DTYPE))
 
     @staticmethod
+    def empty() -> "OpBatch":
+        return OpBatch(np.zeros(0, np.int8), np.zeros(0, KEY_DTYPE),
+                       np.zeros(0, VAL_DTYPE), np.zeros(0, KEY_DTYPE))
+
+    @staticmethod
     def concat(batches) -> "OpBatch":
-        batches = list(batches)
+        """Concatenate batches in order (mixed kinds welcome; the result
+        keeps sequential semantics).  An empty input list — or a list of
+        zero-length batches — yields the empty batch instead of tripping
+        ``np.concatenate`` on an empty sequence."""
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return OpBatch.empty()
         return OpBatch(np.concatenate([b.kinds for b in batches]),
                        np.concatenate([b.keys for b in batches]),
                        np.concatenate([b.vals for b in batches]),
@@ -164,6 +177,12 @@ class EngineStats:
     which may include stale duplicates and tombstones awaiting compaction.
     ``pending_debt`` is the deferred maintenance still owed (0 = fully
     maintained), the deamortization ledger of paper Sec. 5.1.
+
+    Sharded ensembles (``sharded:<base>``, DESIGN.md §6) aggregate: I/O
+    counters are *summed* across shards (still monotone — retired shards'
+    totals are folded in on rebalance), ``height`` is the max, and
+    ``shards`` / ``shard_debt`` carry the ensemble width and the per-shard
+    debt vector (single engines report ``shards=1``, ``shard_debt=[]``).
     """
 
     engine: str
@@ -180,6 +199,8 @@ class EngineStats:
     n_deletes: int
     n_queries: int
     n_ranges: int
+    shards: int = 1
+    shard_debt: list = dataclasses.field(default_factory=list)
 
 
 class StorageEngine(abc.ABC):
@@ -583,6 +604,18 @@ def register_engine(name: str, factory) -> None:
 
 
 def make_engine(name: str, **kw) -> StorageEngine:
+    if name.startswith("sharded:"):
+        # range-partitioned ensemble of any registered engine (DESIGN.md §6):
+        # make_engine("sharded:nbtree", shards=4, **base_kw).  Imported
+        # lazily — repro.shard programs against this module.
+        from repro.shard import ShardedEngine
+        base = name.split(":", 1)[1]
+        if base not in _REGISTRY:
+            raise KeyError(f"unknown base engine {base!r} for {name!r}; "
+                           f"registered: {sorted(_REGISTRY)}")
+        eng = ShardedEngine(base, **kw)
+        eng.name = name
+        return eng
     try:
         factory = _REGISTRY[name]
     except KeyError:

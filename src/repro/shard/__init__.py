@@ -1,0 +1,12 @@
+"""Sharded storage layer: partitioned ensembles of any registered engine.
+
+See DESIGN.md §6.  ``make_engine("sharded:<base>", shards=N)`` (registry
+prefix handled by ``repro.core.engine_api``) or construct
+:class:`ShardedEngine` directly.
+"""
+from .engine import ShardedEngine
+from .partition import HashPartitioner, RangePartitioner
+from .scheduler import DebtScheduler
+
+__all__ = ["ShardedEngine", "RangePartitioner", "HashPartitioner",
+           "DebtScheduler"]

@@ -1,0 +1,55 @@
+"""Cross-shard deamortized maintenance scheduling (DESIGN.md §6).
+
+The paper's worst-case insertion-delay bound comes from spending a bounded
+amount of maintenance per serving step (Sec. 5.1).  A sharded ensemble
+breaks that bound if the step budget is spent obliviously: Luo & Carey
+("On Performance Stability in LSM-based Storage Systems") show that
+unscheduled background maintenance across partitions is exactly what
+reintroduces write stalls at scale-out.  The fix is the same deamortization
+argument applied one level up — each serving step's budget is *allocated*
+across shards so the shard closest to a forced synchronous drain is always
+served first.
+
+:class:`DebtScheduler` is that allocator, kept as a pure, deterministic
+strategy object so it can be unit-tested without engines: given the current
+per-shard debt vector and a unit budget it returns how many maintenance
+units each shard receives this step.  Policy: one unit at a time to the
+heaviest *remaining* (optimistically decremented) debt, ties broken by a
+persistent round-robin pointer so equally-indebted shards share the budget
+fairly across steps instead of the lowest id starving the rest.
+"""
+from __future__ import annotations
+
+
+class DebtScheduler:
+    """Debt-weighted, round-robin-tiebroken budget allocator."""
+
+    def __init__(self):
+        self._rr = 0  # persistent tiebreak pointer (fairness across calls)
+
+    def allocate(self, debts, budget: int) -> list[int]:
+        """Distribute ``budget`` maintenance units over ``debts``.
+
+        Returns a per-shard unit allocation with ``sum(alloc) ==
+        min(budget, sum(debts))``.  Each unit goes to the shard with the
+        highest remaining debt (debt is optimistically decremented by one
+        per granted unit; the engine refreshes true debt from the shard's
+        ``maintain`` return value afterwards).  Exact ties go to the shard
+        at or after the round-robin pointer, which then advances — so a
+        uniformly indebted ensemble is served in rotation, not by id.
+        """
+        remaining = [int(d) for d in debts]
+        alloc = [0] * len(remaining)
+        n = len(remaining)
+        for _ in range(max(0, int(budget))):
+            best, best_debt = -1, 0
+            for off in range(n):
+                s = (self._rr + off) % n
+                if remaining[s] > best_debt:
+                    best, best_debt = s, remaining[s]
+            if best < 0:
+                break
+            alloc[best] += 1
+            remaining[best] -= 1
+            self._rr = (best + 1) % n
+        return alloc

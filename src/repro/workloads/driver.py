@@ -12,6 +12,11 @@ CLI (used by the CI benchmark-smoke job)::
 
     PYTHONPATH=src python -m repro.workloads.driver \
         --engines all --mix ycsb-a --ops 512 --batch 64 --out runs/mixed.json
+
+``--shards N`` (N > 1) wraps every requested engine in the sharded layer
+(``sharded:<name>``, DESIGN.md §6) with ``--partition`` choosing range or
+hash placement.  Emitted JSON carries ``schema_version`` (top level and per
+report) so bench trajectory files are comparable across PRs.
 """
 from __future__ import annotations
 
@@ -26,6 +31,10 @@ from repro.core.engine_api import (FIVE_TIERS, OpKind, StorageEngine,
                                    available_engines, make_engine)
 
 from .generator import MIXES, Workload, make_workload
+
+#: bump when the emitted JSON layout changes (stamped into every report so
+#: trajectory files from different PRs are comparable — or visibly not).
+SCHEMA_VERSION = 2
 
 
 class LatencyHistogram:
@@ -96,6 +105,7 @@ def run_workload(engine: StorageEngine, workload: Workload, *,
 
     stats = engine.stats()
     return {
+        "schema_version": SCHEMA_VERSION,
         "engine": engine.name,
         "workload": dataclasses.asdict(spec) | {
             "mix": {OpKind(k).name.lower(): p for k, p in spec.mix.items()}},
@@ -135,10 +145,17 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--preload", type=int, default=2048)
     ap.add_argument("--key-space", type=int, default=1 << 20)
-    ap.add_argument("--dist", choices=("uniform", "zipfian"), default=None)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dist", choices=("uniform", "zipfian", "hotspot"),
+                    default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload stream seed (same seed -> same op stream)")
     ap.add_argument("--maintain-budget", type=int, default=1)
-    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="N > 1 wraps each engine as sharded:<name> with N "
+                         "range-partitioned shards (DESIGN.md §6)")
+    ap.add_argument("--partition", choices=("range", "hash"), default="range")
+    ap.add_argument("--out", default="runs/driver_report.json",
+                    help="write the JSON report here")
     args = ap.parse_args(argv)
 
     names = FIVE_TIERS if args.engines == ["all"] else tuple(args.engines)
@@ -150,7 +167,12 @@ def main(argv=None) -> None:
 
     reports = []
     for name in names:
-        engine = make_engine(name, **_SMALL_CONFIGS.get(name, {}))
+        base_kw = _SMALL_CONFIGS.get(name, {})
+        if args.shards > 1:
+            engine = make_engine(f"sharded:{name}", shards=args.shards,
+                                 partition=args.partition, **base_kw)
+        else:
+            engine = make_engine(name, **base_kw)
         report = run_workload(engine, make_workload(args.mix, **overrides),
                               maintain_budget=args.maintain_budget)
         reports.append(report)
@@ -158,13 +180,16 @@ def main(argv=None) -> None:
         line = " ".join(
             f"{kind}[p50={h['p50_s']*1e3:.3f}ms p99={h['p99_s']*1e3:.3f}ms "
             f"p100={h['p100_s']*1e3:.3f}ms]" for kind, h in pk.items())
-        print(f"{name:>14} ({report['stats']['clock']}) {args.mix}: {line} "
-              f"pairs={report['stats']['total_pairs']}")
+        print(f"{engine.name:>14} ({report['stats']['clock']}) {args.mix}: "
+              f"{line} pairs={report['stats']['total_pairs']} "
+              f"shards={report['stats']['shards']}")
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"mix": args.mix, "reports": reports}, f, indent=1)
+            json.dump({"schema_version": SCHEMA_VERSION, "mix": args.mix,
+                       "seed": args.seed, "shards": args.shards,
+                       "reports": reports}, f, indent=1)
         print(f"wrote {args.out}")
 
 

@@ -1,8 +1,8 @@
 """Deterministic workload-mix generator (YCSB-style, paper-tier portable).
 
 A :class:`WorkloadSpec` names an operation mix (per-kind probabilities), a
-key distribution (uniform or zipfian over a bounded key space), a range
-selectivity, and sizes; :class:`Workload` expands it into a reproducible
+key distribution (uniform, zipfian, or a moving zipfian hotspot over a
+bounded key space), a range selectivity, and sizes; :class:`Workload` expands it into a reproducible
 stream of :class:`~repro.core.engine_api.OpBatch` — the same stream for
 every engine, which is what makes cross-tier comparisons and conformance
 tests meaningful.
@@ -26,6 +26,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.engine_api import OpBatch, OpKind
+from repro.core.splitmix import splitmix64 as _splitmix64
 
 #: named operation mixes (probabilities per op kind).
 MIXES: dict = {
@@ -41,19 +42,35 @@ MIXES: dict = {
     # tombstone churn: exercises delta-record deletion on every tier.
     "delete-churn":    {OpKind.INSERT: 0.45, OpKind.DELETE: 0.25,
                         OpKind.QUERY: 0.25, OpKind.RANGE: 0.05},
+    # moving hotspot: insert-dominated zipfian mass inside a narrow window
+    # that sweeps across the key space over the stream — the adversary for
+    # any static range partitioning (forces hot-shard rebalancing).
+    "hotspot-shift":   {OpKind.INSERT: 0.80, OpKind.QUERY: 0.15,
+                        OpKind.RANGE: 0.05},
 }
 
 #: mixes that default to a skewed key distribution (YCSB's default).
 _ZIPF_BY_DEFAULT = ("ycsb-a", "ycsb-b", "ycsb-e")
+
+#: mixes that default to the moving-hotspot distribution.
+_HOTSPOT_BY_DEFAULT = ("hotspot-shift",)
 
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     name: str
     mix: dict                      # OpKind -> probability, sums to 1
-    dist: str = "uniform"          # "uniform" | "zipfian"
+    dist: str = "uniform"          # "uniform" | "zipfian" | "hotspot"
     theta: float = 0.8             # zipfian skew (0 = uniform, <1)
     key_space: int = 1 << 24       # keys drawn from [1, key_space]
+    #: "hotspot" dist: fraction of draws inside the moving hot window and
+    #: the window's width as a fraction of the key space.  The window is
+    #: ``[base, base + width)`` (wrapping modulo key_space) with draws
+    #: zipfian toward ``base``; ``base`` sweeps the key space linearly
+    #: with stream progress (batch 0 starts at key 1; the last batch's
+    #: base sits one batch short of key_space).
+    hotspot_frac: float = 0.9
+    hotspot_width: float = 0.05
     range_selectivity: float = 1e-3
     preload: int = 4096            # distinct keys loaded before the mix runs
     n_ops: int = 8192
@@ -74,6 +91,9 @@ class WorkloadSpec:
         assert self.key_space + span < (1 << 31), \
             "key_space + range span must stay below 2^31 (uint32 device tier)"
         assert 0.0 <= self.theta < 1.0
+        assert self.dist in ("uniform", "zipfian", "hotspot"), self.dist
+        assert 0.0 <= self.hotspot_frac <= 1.0
+        assert 0.0 < self.hotspot_width <= 1.0
 
     @property
     def range_span(self) -> int:
@@ -85,16 +105,9 @@ def make_workload(mix_name: str, **overrides) -> "Workload":
     mix = MIXES[mix_name]
     if mix_name in _ZIPF_BY_DEFAULT:
         overrides.setdefault("dist", "zipfian")
+    if mix_name in _HOTSPOT_BY_DEFAULT:
+        overrides.setdefault("dist", "hotspot")
     return Workload(WorkloadSpec(name=mix_name, mix=mix, **overrides))
-
-
-def _splitmix64(x: np.ndarray) -> np.ndarray:
-    """Vectorized splitmix64 finalizer (uint64 wraparound arithmetic)."""
-    x = x.astype(np.uint64)
-    x = (x + np.uint64(0x9E3779B97F4A7C15))
-    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    return x ^ (x >> np.uint64(31))
 
 
 class Workload:
@@ -104,15 +117,35 @@ class Workload:
         self.spec = spec
 
     # ---------------------------------------------------------------- key draw
-    def _draw_keys(self, rng: np.random.Generator, n: int) -> np.ndarray:
+    def _zipf_ranks(self, rng: np.random.Generator, n: int,
+                    space: int) -> np.ndarray:
+        """Zipfian ranks in [0, space) via the bounded power-law inverse CDF."""
+        u = rng.random(n)
+        g = 1.0 - self.spec.theta
+        ranks = ((u * (float(space) ** g - 1.0)) + 1.0) ** (1.0 / g)
+        return np.minimum(ranks.astype(np.uint64), np.uint64(space)) - 1
+
+    def _draw_keys(self, rng: np.random.Generator, n: int,
+                   progress: float = 0.0) -> np.ndarray:
         space = self.spec.key_space
         if self.spec.dist == "zipfian" and self.spec.theta > 0.0:
-            u = rng.random(n)
-            g = 1.0 - self.spec.theta
-            ranks = ((u * (float(space) ** g - 1.0)) + 1.0) ** (1.0 / g)
-            ranks = np.minimum(ranks.astype(np.uint64), np.uint64(space)) - 1
+            ranks = self._zipf_ranks(rng, n, space)
             # scatter hot ranks over the key space (YCSB hashed key order).
             return (_splitmix64(ranks) % np.uint64(space)) + np.uint64(1)
+        if self.spec.dist == "hotspot":
+            # moving hot window [base, base + width): base sweeps the key
+            # space with progress, in-window draws are zipfian toward base,
+            # the rest of the mass is uniform background.  All draws
+            # consume the rng in a fixed order, so streams are
+            # reproducible per seed.
+            width = max(1, int(space * self.spec.hotspot_width))
+            base = int(progress * (space - 1))          # 0-based sweep
+            hot = rng.random(n) < self.spec.hotspot_frac
+            offs = self._zipf_ranks(rng, n, width)      # clustered near 0
+            cold = rng.integers(0, space, n, dtype=np.uint64)
+            keys0 = np.where(
+                hot, (np.uint64(base) + offs) % np.uint64(space), cold)
+            return keys0 + np.uint64(1)
         return rng.integers(1, space + 1, n, dtype=np.uint64)
 
     # ---------------------------------------------------------------- preload
@@ -139,7 +172,7 @@ class Workload:
             kinds = rng.choice(kinds_pool, b, p=probs).astype(np.int8)
             if spec.group_kinds:
                 kinds = kinds[np.argsort(kinds, kind="stable")]
-            keys = self._draw_keys(rng, b)
+            keys = self._draw_keys(rng, b, progress=emitted / spec.n_ops)
             vals = np.zeros(b, np.int64)
             his = np.zeros(b, np.uint64)
             ins = kinds == int(OpKind.INSERT)

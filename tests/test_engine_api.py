@@ -151,6 +151,57 @@ def test_opbatch_validation_and_concat():
     assert int(b.his[2]) == 5
 
 
+def test_opbatch_concat_empty_inputs():
+    e = OpBatch.concat([])                      # empty list: empty batch
+    assert len(e) == 0 and e.keys.dtype == np.uint64
+    # zero-length members are dropped, order of the rest preserved
+    b = OpBatch.concat([OpBatch.empty(), OpBatch.deletes([7]),
+                        OpBatch.inserts([], []), OpBatch.queries([8])])
+    assert b.kinds.tolist() == [OpKind.DELETE, OpKind.QUERY]
+    assert b.keys.tolist() == [7, 8]
+    # an engine accepts the empty batch and returns an empty result
+    res = make_engine("lsm", mem_pairs=64).apply(OpBatch.concat([]))
+    assert len(res.kinds) == 0 and len(res.latency_s) == 0
+
+
+def test_opbatch_concat_mixed_kinds_equals_sequential_apply():
+    """Property: concat-then-apply == sequential apply (refimpl tier)."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        pieces = []
+        for _ in range(rng.integers(0, 6)):
+            kind = rng.integers(0, 4)
+            n = int(rng.integers(0, 8))
+            ks = rng.integers(1, 512, n, dtype=np.uint64)
+            if kind == 0:
+                pieces.append(OpBatch.inserts(ks, rng.integers(0, 99, n)))
+            elif kind == 1:
+                pieces.append(OpBatch.deletes(ks))
+            elif kind == 2:
+                pieces.append(OpBatch.queries(ks))
+            else:
+                pieces.append(OpBatch.ranges(ks, ks + np.uint64(40)))
+        a = make_engine("nbtree", f=3, sigma=64)
+        b = make_engine("nbtree", f=3, sigma=64)
+        res = a.apply(OpBatch.concat(pieces))
+        parts = [b.apply(p) for p in pieces]
+        found = np.concatenate([p.found for p in parts]) \
+            if parts else np.zeros(0, bool)
+        values = np.concatenate([p.values for p in parts]) \
+            if parts else np.zeros(0)
+        hits = [h for p in parts for h in p.range_hits]
+        assert res.found.tolist() == found.tolist(), seed
+        assert res.values.tolist() == values.tolist(), seed
+        for h1, h2 in zip(res.range_hits, hits):
+            assert (h1 is None) == (h2 is None)
+            if h1 is not None:
+                assert h1[0].tolist() == h2[0].tolist()
+                assert h1[1].tolist() == h2[1].tolist()
+        a.drain()
+        b.drain()
+        assert a.count_live() == b.count_live(), seed
+
+
 def test_workload_generator_deterministic():
     a = [b for b in _workload().batches()]
     c = [b for b in _workload().batches()]
@@ -174,6 +225,30 @@ def test_workload_zipfian_is_skewed():
     # (a uniform draw gives ~1%).
     frac = top[: max(1, len(top) // 100)].sum() / counts.sum()
     assert frac > 0.10, frac
+
+
+def test_hotspot_shift_deterministic_and_moving():
+    kw = dict(key_space=1 << 16, n_ops=2048, batch_size=256, preload=64,
+              seed=9)
+    wl = make_workload("hotspot-shift", **kw)
+    assert wl.spec.dist == "hotspot"
+    a, b = list(wl.batches()), list(make_workload("hotspot-shift",
+                                                  **kw).batches())
+    for x, y in zip(a, b):            # same seed -> identical op stream
+        assert np.array_equal(x.kinds, y.kinds)
+        assert np.array_equal(x.keys, y.keys)
+        assert np.array_equal(x.vals, y.vals)
+        assert np.array_equal(x.his, y.his)
+    c = list(make_workload("hotspot-shift", **{**kw, "seed": 10}).batches())
+    assert any(not np.array_equal(x.keys, y.keys) for x, y in zip(a, c))
+    # the hot mass moves: median insert key of the first batch sits near
+    # the bottom of the key space, the last batch's near the top.
+    def med(batch):
+        ins = batch.keys[batch.kinds == int(OpKind.INSERT)]
+        return float(np.median(ins.astype(np.float64)))
+    span = wl.spec.key_space
+    assert med(a[0]) < 0.25 * span
+    assert med(a[-1]) > 0.5 * span
 
 
 def test_all_mixes_generate():

@@ -1,0 +1,266 @@
+"""Sharded storage layer tests (DESIGN.md §6).
+
+Covers the routing tables (range + hash partitioners), the debt-weighted
+maintenance scheduler, order-preserving batch split/merge against an
+unsharded engine, hot-shard splitting under a moving hotspot (aggregated
+stats must stay monotone across rebalances), and the 4-shard conformance
+replay: the delete-churn op-stream through a 4-shard wrapper of every tier
+against the sorted-dict oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine_api import (FIVE_TIERS, OpBatch, OpKind, make_engine)
+from repro.shard import DebtScheduler, HashPartitioner, RangePartitioner
+from repro.workloads import make_workload
+
+#: small-footprint per-shard configs so the device tier stays CI-sized.
+CONFIGS = {
+    "nbtree": dict(f=3, sigma=128),
+    "lsm": dict(mem_pairs=128),
+    "btree": {},
+    "bepsilon": dict(node_bytes=1 << 14, cached_levels=1),
+    "jax-nbtree": dict(f=4, sigma=128, max_nodes=64),
+}
+
+
+# ------------------------------------------------------------- partitioners
+def test_range_partitioner_routing():
+    p = RangePartitioner([100, 200])
+    assert p.n_shards == 3
+    assert p.shard_of([0, 99, 100, 150, 199, 200, 5000]).tolist() \
+        == [0, 0, 1, 1, 1, 2, 2]
+    assert list(p.shards_for_range(0, 50)) == [0]
+    assert list(p.shards_for_range(50, 100)) == [0, 1]
+    assert list(p.shards_for_range(150, 10**6)) == [1, 2]
+    assert list(p.shards_for_range(10, 5)) == []          # lo > hi: empty
+    assert p.interval(0) == (0, 99)
+    assert p.interval(1) == (100, 199)
+    assert p.interval(2)[0] == 200
+
+
+def test_range_partitioner_from_sample_and_split():
+    keys = np.arange(1, 1001, dtype=np.uint64)
+    p = RangePartitioner.from_sample(keys, 4)
+    assert p.n_shards == 4
+    sid = p.shard_of(keys)
+    counts = np.bincount(sid, minlength=4)
+    assert counts.min() > 150          # quantile pivots balance the sample
+    p.split(1, int(p.interval(1)[0]) + 10)
+    assert p.n_shards == 5
+    assert np.all(np.diff(p.pivots.astype(np.int64)) > 0)
+    # degenerate samples collapse to fewer shards, never to invalid pivots
+    assert RangePartitioner.from_sample([7, 7, 7], 4).n_shards == 1
+    assert RangePartitioner.from_sample([], 8).n_shards == 1
+
+
+def test_hash_partitioner_covers_and_fans_out():
+    p = HashPartitioner(4)
+    sid = p.shard_of(np.arange(1, 4097, dtype=np.uint64))
+    assert set(sid.tolist()) == {0, 1, 2, 3}
+    assert np.bincount(sid, minlength=4).min() > 4096 // 8   # roughly even
+    assert list(p.shards_for_range(5, 10)) == [0, 1, 2, 3]
+    assert list(p.shards_for_range(10, 5)) == []
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_debt_weighted_allocation():
+    s = DebtScheduler()
+    assert s.allocate([3, 1, 0], 4) == [3, 1, 0]
+    assert s.allocate([0, 0, 0], 5) == [0, 0, 0]     # no debt, no spend
+    assert s.allocate([2, 5], 3) == [0, 3]           # heaviest first
+    assert sum(s.allocate([1, 1], 10)) == 2          # never exceeds debt
+
+
+def test_scheduler_round_robin_tiebreak():
+    s = DebtScheduler()
+    first = s.allocate([1, 1, 1, 1], 2)
+    second = s.allocate([1, 1, 1, 1], 2)
+    assert first == [1, 1, 0, 0]
+    assert second == [0, 0, 1, 1]     # pointer advanced: no shard starves
+
+
+# ------------------------------------------------- order-preserving merge
+def test_sharded_matches_unsharded_interleaved():
+    """Ungrouped batches: ranges spanning shards interleaved with writes."""
+    rng = np.random.default_rng(7)
+    sh = make_engine("sharded:nbtree", shards=4, **CONFIGS["nbtree"])
+    ref = make_engine("nbtree", **CONFIGS["nbtree"])
+    keys = rng.permutation(np.arange(1, 801, dtype=np.uint64))
+    pre = OpBatch.inserts(keys, np.arange(1, 801, dtype=np.int64))
+    sh.apply(pre)
+    ref.apply(pre)
+    for step in range(8):
+        n = 48
+        kinds = rng.integers(0, 4, n).astype(np.int8)   # fully interleaved
+        ks = rng.integers(1, 1000, n, dtype=np.uint64)
+        vals = np.where(kinds == int(OpKind.INSERT),
+                        np.arange(n, dtype=np.int64) + 1000 * step, 0)
+        his = np.where(kinds == int(OpKind.RANGE),
+                       ks + np.uint64(120), 0).astype(np.uint64)
+        b = OpBatch(kinds, ks, vals, his)
+        r1, r2 = sh.apply(b), ref.apply(b)
+        assert r1.found.tolist() == r2.found.tolist(), step
+        assert r1.values.tolist() == r2.values.tolist(), step
+        for i in np.nonzero(kinds == int(OpKind.RANGE))[0]:
+            assert r1.range_hits[i][0].tolist() \
+                == r2.range_hits[i][0].tolist(), (step, i)
+            assert r1.range_hits[i][1].tolist() \
+                == r2.range_hits[i][1].tolist(), (step, i)
+        sh.maintain(2)
+        ref.maintain(2)
+    sh.drain()
+    ref.drain()
+    assert sh.count_live() == ref.count_live()
+
+
+def test_sharded_hash_partition_conformance():
+    sh = make_engine("sharded:nbtree", shards=4, partition="hash",
+                     **CONFIGS["nbtree"])
+    keys = np.arange(1, 513, dtype=np.uint64)
+    sh.apply(OpBatch.inserts(keys, np.arange(512, dtype=np.int64)))
+    res = sh.apply(OpBatch.ranges([100], [200]))
+    rk, rv = res.range_hits[0]
+    assert rk.tolist() == list(range(100, 201))     # merged sorted fan-out
+    assert rv.tolist() == list(range(99, 200))
+    st = sh.stats()
+    assert st.shards == 4 and st.total_pairs == 512
+
+
+# --------------------------------------------------- sharded odds and ends
+def test_sharded_empty_and_prebootstrap_batches():
+    sh = make_engine("sharded:nbtree", **CONFIGS["nbtree"])
+    res = sh.apply(OpBatch.empty())
+    assert len(res.kinds) == 0
+    # a query-only first batch bootstraps from its keys and answers empty.
+    res = sh.apply(OpBatch.queries([5, 10]))
+    assert not res.found.any()
+    res = sh.apply(OpBatch.ranges([1], [100]))
+    assert res.range_hits[0][0].tolist() == []
+
+
+def test_sharded_registry_names():
+    with pytest.raises(KeyError):
+        make_engine("sharded:no-such-base")
+    eng = make_engine("sharded:lsm", shards=2, mem_pairs=64)
+    assert eng.name == "sharded:lsm"
+    eng.apply(OpBatch.inserts(np.arange(1, 65, dtype=np.uint64),
+                              np.arange(64, dtype=np.int64)))
+    s = eng.stats()
+    assert s.shards == 2 and len(s.shard_debt) == 2
+    assert s.n_inserts == 64 and s.total_pairs == 64
+
+
+# ------------------------------------------------------ hot-shard rebalance
+@pytest.mark.parametrize("base", ["nbtree", "lsm"])
+def test_hot_shard_split_keeps_stats_monotone(base):
+    """Moving hotspot forces rebalances; aggregate I/O must stay monotone
+    and the visible state must stay exact across every split."""
+    wl = make_workload("hotspot-shift", key_space=1 << 14, n_ops=768,
+                       batch_size=128, preload=256, seed=5)
+    sh = make_engine(f"sharded:{base}", shards=2, min_split_pairs=96,
+                     skew_factor=1.5, **CONFIGS[base])
+    model = {}
+    pre = wl.preload_batch()
+    sh.apply(pre)
+    model.update(zip(pre.keys.tolist(), pre.vals.tolist()))
+    last_io, last_seeks = sh.io_time_s(), sh.stats().io_seeks
+    for b in wl.batches():
+        res = sh.apply(b)
+        for i in range(len(b)):
+            kind = OpKind(int(b.kinds[i]))
+            k = int(b.keys[i])
+            if kind is OpKind.INSERT:
+                model[k] = int(b.vals[i])
+            elif kind is OpKind.DELETE:
+                model.pop(k, None)
+            elif kind is OpKind.QUERY:
+                want = model.get(k)
+                assert bool(res.found[i]) == (want is not None)
+                if want is not None:
+                    assert int(res.values[i]) == want
+        sh.maintain(4)
+        st = sh.stats()
+        assert st.io_time_s >= last_io        # monotone across rebalances
+        assert st.io_seeks >= last_seeks
+        last_io, last_seeks = st.io_time_s, st.io_seeks
+    assert sh.n_splits > 0, "hotspot stream must force at least one split"
+    sh.drain()
+    st = sh.stats()
+    assert st.shards == 2 + sh.n_splits
+    assert st.total_pairs == len(model)
+    assert st.pending_debt == 0 and len(st.shard_debt) == st.shards
+
+
+# ------------------------------------------------- 4-shard conformance suite
+def _stream():
+    wl = make_workload("delete-churn", key_space=4096, n_ops=320,
+                       batch_size=64, preload=192, range_selectivity=0.01,
+                       seed=11)
+    pre = wl.preload_batch()
+    batches = list(wl.batches())
+    model = dict(zip(pre.keys.tolist(), pre.vals.tolist()))
+    expected = []
+    for b in batches:
+        exp = []
+        for i in range(len(b)):
+            kind = OpKind(int(b.kinds[i]))
+            k = int(b.keys[i])
+            if kind is OpKind.INSERT:
+                model[k] = int(b.vals[i])
+                exp.append(None)
+            elif kind is OpKind.DELETE:
+                model.pop(k, None)
+                exp.append(None)
+            elif kind is OpKind.QUERY:
+                exp.append(model.get(k))
+            else:
+                hi = int(b.his[i])
+                ks = sorted(x for x in model if k <= x <= hi)
+                exp.append((ks, [model[x] for x in ks]))
+        expected.append(exp)
+    return pre, batches, expected, len(model)
+
+
+@pytest.fixture(scope="module")
+def churn_stream():
+    return _stream()
+
+
+@pytest.mark.parametrize("name", FIVE_TIERS)
+def test_sharded_conformance(name, churn_stream):
+    pre, batches, expected, n_live = churn_stream
+    eng = make_engine(f"sharded:{name}", shards=4, min_split_pairs=64,
+                      skew_factor=2.0, **CONFIGS[name])
+    eng.apply(pre)
+    eng.drain()
+    last_io = eng.io_time_s()
+
+    for bi, (b, exp) in enumerate(zip(batches, expected)):
+        res = eng.apply(b)
+        assert not res.range_truncated.any(), (name, bi)
+        for i in range(len(b)):
+            kind = OpKind(int(b.kinds[i]))
+            if kind is OpKind.QUERY:
+                want = exp[i]
+                assert bool(res.found[i]) == (want is not None), (name, bi, i)
+                if want is not None:
+                    assert int(res.values[i]) == want, (name, bi, i)
+            elif kind is OpKind.RANGE:
+                rk, rv = res.range_hits[i]
+                assert rk.tolist() == exp[i][0], (name, bi, i)
+                assert rv.tolist() == exp[i][1], (name, bi, i)
+        eng.maintain(2)
+        io = eng.io_time_s()            # summed cost must never decrease
+        assert io >= last_io, (name, bi)
+        last_io = io
+
+    eng.drain()
+    s = eng.stats()
+    assert s.io_time_s >= last_io, name
+    assert s.total_pairs == n_live, (name, s.total_pairs, n_live)
+    assert s.pending_debt == 0, name
+    assert s.physical_pairs >= s.total_pairs, name
+    assert s.shards >= 4 and len(s.shard_debt) == s.shards, name
+    assert s.n_inserts + s.n_deletes + s.n_queries + s.n_ranges \
+        == len(pre) + sum(len(b) for b in batches), name

@@ -1,0 +1,196 @@
+"""Offered-load saturation sweep: throughput vs tail latency, open loop.
+
+This scenario operationalizes the paper's headline claim — worst-case
+insertion delays orders of magnitude below the LSM family — in the only
+setting where worst-case delay *matters operationally*: open-loop load,
+where every request arrives on its own schedule and a compaction stall
+turns into queueing delay for everything behind it (Luo & Carey, "On
+Performance Stability in LSM-based Storage Systems").
+
+One Poisson arrival trace per offered rate (same seed, same op content for
+every tier — the cross-tier differential) is served through the ingest
+frontend (`repro.ingest`, DESIGN.md §7): bounded queue, group commit,
+admission control, maintenance interleaved per commit, everything on the
+simulated clock, so the emitted JSON is byte-identical across runs.
+
+Expected shape, rising offered load:
+
+* the **LSM tier diverges at its stall point** — end-to-end p99.9/p100
+  jump to the compaction-avalanche scale well before mean-throughput
+  saturation, then the queue pins at the admission bound and ops shed;
+* the **NB-tree tier stays at the deamortized bound** — pending debt never
+  exceeds one cascade (the paper's per-step quantum), tails stay near the
+  group-commit floor until genuine capacity saturation;
+* at some shared offered load NB-tree's insert p99.9 is >= 10x below the
+  LSM tier's (the `check` headline);
+* the incremental B+-tree saturates earliest (its per-insert random I/O
+  bounds capacity — Fig. 6's story in open loop).
+
+The device tier (`jax-nbtree`) runs the same protocol under the
+deterministic *virtual* service model (wall-clock measurement cannot be
+byte-reproducible; see `repro.ingest.frontend`), so its rows exercise
+queueing/admission correctness, not device speed.
+
+Standalone CLI (CI bench-smoke; seed trajectory record at the repo root)::
+
+    PYTHONPATH=src python -m benchmarks.fig_saturation --quick \
+        --out runs/fig_saturation.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.cost_model import SSD
+from repro.core.engine_api import make_engine
+from repro.ingest import FrontendConfig, PoissonArrivals, make_trace, \
+    run_open_loop
+from repro.workloads import make_workload
+from repro.workloads.driver import SCHEMA_VERSION
+
+KEY_SPACE = 1 << 20
+
+#: per-tier configs on the paper's SSD testbed constants; buffers sized so
+#: maintenance fires many times inside the measured window.
+CONFIGS = {
+    "nbtree": dict(f=3, sigma=512, device=SSD),
+    "lsm": dict(mem_pairs=512, device=SSD),
+    "btree": dict(device=SSD),
+    "bepsilon": dict(node_bytes=1 << 16, cached_levels=1, device=SSD),
+    # sigma sized for the 16k-pair preload (RUN_CAP must absorb a full
+    # flush at the tree's deepest fanout); the device tier runs under the
+    # virtual service model, so sigma does not shape its latency rows.
+    "jax-nbtree": dict(f=4, sigma=1024, max_nodes=256),
+}
+
+#: offered insert-heavy load, ops/second (shared across tiers per point).
+RATES = (20_000, 50_000, 100_000, 200_000, 400_000)
+
+#: the wall-clock device tier runs under the virtual service model; one
+#: mid-sweep point demonstrates protocol + debt bounds, not device speed.
+_DEVICE_RATES = (100_000,)
+
+#: serving-node knobs: queue bound, group-commit size, linger deadline.
+FRONTEND = FrontendConfig(max_queue=2048, commit_ops=64, linger_s=2e-4)
+
+#: one source of truth for the smoke-sized sweep (--quick here and in
+#: benchmarks/run.py must produce comparable artifacts).
+QUICK_KWARGS = dict(tiers=("nbtree", "lsm"), rates=(20_000, 200_000),
+                    n_ops=4500, preload=16384)
+
+
+def _row(tier: str, rate: float, rep: dict) -> dict:
+    ol = rep["open_loop"]
+    ins = ol["per_kind_e2e"].get("insert", {})
+    st = rep["stats"]
+    return dict(
+        fig="saturation", index=tier, rate=rate, mix="insert-heavy",
+        clock=st["clock"], service_model=ol["service_model"],
+        utilization=ol["server"]["utilization"],
+        n_done=ol["n_done"], n_shed=ol["n_shed"],
+        shed_rate=ol["shed_rate"],
+        insert_p50_ms=ins.get("p50_s", 0.0) * 1e3,
+        insert_p99_ms=ins.get("p99_s", 0.0) * 1e3,
+        insert_p999_ms=ins.get("p999_s", 0.0) * 1e3,
+        insert_p100_ms=ins.get("p100_s", 0.0) * 1e3,
+        max_queue_depth=ol["queue"]["max_depth"],
+        n_stall_commits=ol["stalls"]["n_stall_commits"],
+        ops_queued_behind_stalls=ol["stalls"]["ops_queued_behind_stalls"],
+        debt_max=ol["stalls"]["debt_max"],
+        live_pairs=st["total_pairs"],
+        bloom_probes=st["bloom_probes"],
+        bloom_negative_skips=st["bloom_negative_skips"],
+        bloom_false_positives=st["bloom_false_positives"])
+
+
+def run(tiers=("nbtree", "lsm", "btree", "bepsilon", "jax-nbtree"),
+        rates=RATES, n_ops: int = 6000, preload: int = 16384,
+        mix: str = "insert-heavy", seed: int = 0):
+    rows = []
+    for rate in rates:
+        wl = make_workload(mix, key_space=KEY_SPACE, n_ops=n_ops,
+                           preload=preload, batch_size=256, seed=seed)
+        trace = make_trace(wl, PoissonArrivals(rate))
+        for tier in tiers:
+            if tier == "jax-nbtree" and rate not in _DEVICE_RATES:
+                continue
+            engine = make_engine(tier, **CONFIGS[tier])
+            rep = run_open_loop(engine, trace, config=FRONTEND)
+            rows.append(_row(tier, rate, rep))
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    nb = {r["rate"]: r for r in rows if r["index"] == "nbtree"}
+    lsm = {r["rate"]: r for r in rows if r["index"] == "lsm"}
+    shared = sorted(set(nb) & set(lsm))
+
+    # headline: at some offered load NB-tree's p99.9 end-to-end insert
+    # latency is >= 10x below the LSM tier's while NB-tree debt stays at
+    # the single-engine deamortized bound (one pending cascade).
+    hits = [r for r in shared
+            if nb[r]["insert_p999_ms"] * 10.0 <= lsm[r]["insert_p999_ms"]
+            and nb[r]["debt_max"] <= 1]
+    if hits:
+        r = hits[0]
+        ratio = lsm[r]["insert_p999_ms"] / max(nb[r]["insert_p999_ms"], 1e-12)
+        out.append(f"saturation: at {r/1e3:.0f}k ops/s NB-tree p99.9 "
+                   f"end-to-end is {ratio:.0f}x below LSM with debt_max="
+                   f"{nb[r]['debt_max']} (deamortized bound)  [matches paper]")
+    else:
+        out.append("saturation: no offered load with NB-tree p99.9 >= 10x "
+                   "below LSM at bounded debt  [MISMATCH]")
+
+    # the deamortized bound holds at *every* offered load, saturation included.
+    worst_debt = max((r["debt_max"] for r in nb.values()), default=0)
+    tag = "matches paper" if worst_debt <= 1 else "MISMATCH"
+    out.append(f"saturation: NB-tree pending debt <= 1 cascade at every "
+               f"offered load (worst {worst_debt})  [{tag}]")
+
+    # LSM hits its admission wall (sheds) at an offered load NB-tree still
+    # serves in full — the stall point arrives first for the LSM tier.
+    div = [r for r in shared
+           if lsm[r]["n_shed"] > 0 and nb[r]["n_shed"] == 0]
+    tag = "matches paper" if div else "MISMATCH"
+    at = f"{div[0]/1e3:.0f}k ops/s" if div else "none"
+    out.append(f"saturation: LSM sheds load while NB-tree serves every op "
+               f"(first at {at})  [{tag}]")
+
+    # differential: tiers that shed nothing applied the same op stream, so
+    # they must agree on final live pairs at every shared rate.
+    for rate in sorted({r["rate"] for r in rows}):
+        full = [r for r in rows if r["rate"] == rate and r["n_shed"] == 0]
+        pairs = {r["live_pairs"] for r in full}
+        if len(full) >= 2:
+            tag = "matches paper" if len(pairs) == 1 else "MISMATCH"
+            out.append(f"saturation: no-shed tiers agree on live pairs at "
+                       f"{rate/1e3:.0f}k ops/s ({sorted(pairs)})  [{tag}]")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="runs/fig_saturation.json")
+    args = ap.parse_args(argv)
+    kwargs = dict(QUICK_KWARGS) if args.quick else {}
+    rows = run(seed=args.seed, **kwargs)
+    checks = check(rows)
+    for r in rows:
+        print(r)
+    for c in checks:
+        print(" ->", c)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"schema_version": SCHEMA_VERSION, "seed": args.seed,
+                   "quick": bool(args.quick), "rows": rows,
+                   "checks": checks}, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import time
 
 from . import (bench_engine, bench_kernels, fig4_fanout, fig5_dtree_size,
                fig67_insertion, fig89_query, fig_mixed, fig_range,
-               fig_scaling, table2_theory)
+               fig_saturation, fig_scaling, table2_theory)
 
 SUITES = [
     ("fig4_fanout (Fig 4a/4b)", fig4_fanout),
@@ -22,6 +22,7 @@ SUITES = [
     ("fig_range (range scans)", fig_range),
     ("fig_mixed (mixed workloads)", fig_mixed),
     ("fig_scaling (sharded scale-out)", fig_scaling),
+    ("fig_saturation (open-loop tail latency)", fig_saturation),
     ("table2_theory (Table 2)", table2_theory),
     ("bench_kernels (Pallas)", bench_kernels),
     ("bench_engine (serving)", bench_engine),
@@ -51,6 +52,8 @@ def main() -> None:
             kwargs = {"mixes": ("ycsb-a",), "n_ops": 1024, "preload": 1024}
         elif args.quick and mod is fig_scaling:
             kwargs = fig_scaling.QUICK_KWARGS
+        elif args.quick and mod is fig_saturation:
+            kwargs = fig_saturation.QUICK_KWARGS
         elif args.quick and mod is table2_theory:
             kwargs = {"sizes": (10_000, 30_000, 90_000)}
         rows = mod.run(**kwargs)

@@ -178,6 +178,14 @@ class EngineStats:
     ``pending_debt`` is the deferred maintenance still owed (0 = fully
     maintained), the deamortization ledger of paper Sec. 5.1.
 
+    ``bloom_probes`` / ``bloom_negative_skips`` / ``bloom_false_positives``
+    are the Bloom-filter effectiveness counters of paper Sec. 5.2 (probes
+    issued on point-query descents, negatives that skipped a run search,
+    and positives whose search then missed).  Engines without per-run
+    filters — or with filters disabled, e.g. ``nbtree-nobloom`` — report
+    zeros, which is what lets saturation/query reports attribute the
+    nbtree-vs-nbtree-nobloom query savings from driver JSON alone.
+
     Sharded ensembles (``sharded:<base>``, DESIGN.md §6) aggregate: I/O
     counters are *summed* across shards (still monotone — retired shards'
     totals are folded in on rebalance), ``height`` is the max, and
@@ -201,6 +209,9 @@ class EngineStats:
     n_ranges: int
     shards: int = 1
     shard_debt: list = dataclasses.field(default_factory=list)
+    bloom_probes: int = 0
+    bloom_negative_skips: int = 0
+    bloom_false_positives: int = 0
 
 
 class StorageEngine(abc.ABC):
@@ -335,11 +346,16 @@ class CostModelEngine(StorageEngine):
     def _pending_debt(self) -> int:
         return 0
 
+    def _bloom_stats(self) -> tuple:
+        """(probes, negative_skips, false_positives); zeros by default."""
+        return (0, 0, 0)
+
     def io_time_s(self) -> float:
         return self.cm.time
 
     def stats(self) -> EngineStats:
         cm = self.cm
+        probes, skips, fps = self._bloom_stats()
         return EngineStats(
             engine=self.name, clock=self.clock, io_time_s=cm.time,
             io_seeks=cm.seeks, io_bytes_read=cm.bytes_read,
@@ -350,7 +366,9 @@ class CostModelEngine(StorageEngine):
             n_inserts=self._counts[OpKind.INSERT],
             n_deletes=self._counts[OpKind.DELETE],
             n_queries=self._counts[OpKind.QUERY],
-            n_ranges=self._counts[OpKind.RANGE])
+            n_ranges=self._counts[OpKind.RANGE],
+            bloom_probes=int(probes), bloom_negative_skips=int(skips),
+            bloom_false_positives=int(fps))
 
 
 class RefNBTreeEngine(CostModelEngine):
@@ -381,6 +399,11 @@ class RefNBTreeEngine(CostModelEngine):
     def _pending_debt(self) -> int:
         return 0 if self.impl._cascade is None else 1
 
+    def _bloom_stats(self) -> tuple:
+        t = self.impl
+        return (t.bloom_probes, t.bloom_negative_skips,
+                t.bloom_false_positives)
+
 
 class LSMEngine(CostModelEngine):
     name = "lsm"
@@ -392,6 +415,11 @@ class LSMEngine(CostModelEngine):
 
     def height(self) -> int:
         return len(self.impl.levels)
+
+    def _bloom_stats(self) -> tuple:
+        t = self.impl
+        return (t.bloom_probes, t.bloom_negative_skips,
+                t.bloom_false_positives)
 
 
 class BTreeEngine(CostModelEngine):
@@ -588,7 +616,10 @@ class DeviceNBTreeEngine(StorageEngine):
             n_inserts=self._counts[OpKind.INSERT],
             n_deletes=self._counts[OpKind.DELETE],
             n_queries=self._counts[OpKind.QUERY],
-            n_ranges=self._counts[OpKind.RANGE])
+            n_ranges=self._counts[OpKind.RANGE],
+            bloom_probes=self.idx.bloom_probes,
+            bloom_negative_skips=self.idx.bloom_negative_skips,
+            bloom_false_positives=self.idx.bloom_false_positives)
 
 
 # =================================================================== registry

@@ -142,6 +142,16 @@ def _query_batch_impl(pivots, nchild, children, run_keys, run_vals, run_count,
     node = jnp.zeros(B, jnp.int32)
     found = jnp.zeros(B, bool)
     out = jnp.full(B, -1, jnp.int32)
+    # Bloom-effectiveness tallies (paper Sec. 5.2), reduced on device so the
+    # fused call stays one round trip: probes issued, negatives that skipped
+    # a run search, and positives whose search then missed (false positives).
+    n_probe = jnp.int32(0)
+    n_neg = jnp.int32(0)
+    n_fp = jnp.int32(0)
+    # the descent parks on its leaf for any iterations left after reaching
+    # it; `prev` masks those repeats out of the tallies (one logical probe
+    # per distinct node on each query's root-to-leaf path).
+    prev = jnp.full(B, -1, jnp.int32)
 
     pos = bloom_hash_ref(q, h, nbits)  # (h, B), shared across levels
 
@@ -151,7 +161,8 @@ def _query_batch_impl(pivots, nchild, children, run_keys, run_vals, run_count,
         w = bloom[node[None, :], pos // 32]              # (h, B)
         bit = (w >> (pos % 32).astype(jnp.uint32)) & jnp.uint32(1)
         positive = jnp.all(bit == 1, axis=0)
-        do = positive & ~found & (cnt > 0)
+        probe = ~found & (cnt > 0) & (node != prev)      # filter consulted
+        do = positive & probe
         # ---- lockstep binary search over the node's run -------------------
         lo = jnp.zeros(B, jnp.int32)
         hi = cnt
@@ -165,13 +176,17 @@ def _query_batch_impl(pivots, nchild, children, run_keys, run_vals, run_count,
         hit = do & (lo < cnt) & (hitk == q)
         out = jnp.where(hit & ~found, run_vals[node, jnp.clip(lo, 0, run_cap - 1)], out)
         found = found | hit
+        n_probe += jnp.sum(probe.astype(jnp.int32))
+        n_neg += jnp.sum((probe & ~positive).astype(jnp.int32))
+        n_fp += jnp.sum((do & ~hit).astype(jnp.int32))
         # ---- descend via pivots (cross-s-node linkage) ---------------------
         pv = pivots[node]                                # (B, f-1)
         ci = jnp.sum((q[:, None] >= pv).astype(jnp.int32), axis=1)
         child = children[node, jnp.clip(ci, 0, f - 1)]
+        prev = node
         node = jnp.where(nchild[node] > 0, child, node)
     present = found & (out != TOMBSTONE32)
-    return present, out
+    return present, out, n_probe, n_neg, n_fp
 
 
 @functools.partial(
@@ -259,6 +274,10 @@ class NBTreeIndex:
         self._next_id = 1
         self._pending: list[_HostNode] = []   # oversized nodes awaiting work
         self.n_items = 0
+        # Bloom effectiveness (paper Sec. 5.2); see query_batch.
+        self.bloom_probes = 0
+        self.bloom_negative_skips = 0
+        self.bloom_false_positives = 0
 
     # ------------------------------------------------------------------ public
     def insert_batch(self, keys, vals) -> None:
@@ -301,13 +320,24 @@ class NBTreeIndex:
         self.insert_batch(keys, jnp.full(keys.shape, TOMBSTONE32, jnp.int32))
 
     def query_batch(self, keys):
-        """(present: bool (B,), vals: int32 (B,)) — one fused device call."""
+        """(present: bool (B,), vals: int32 (B,)) — one fused device call.
+
+        Bloom-effectiveness tallies for the batch (probes / negative skips /
+        false positives, reduced on device) accumulate into
+        ``bloom_probes`` / ``bloom_negative_skips`` /
+        ``bloom_false_positives`` — the paper Sec. 5.2 attribution counters
+        surfaced through ``EngineStats``.
+        """
         q = jnp.asarray(keys, jnp.uint32)
-        return _query_batch_impl(
+        present, out, n_probe, n_neg, n_fp = _query_batch_impl(
             self.pivots, self.nchild, self.children, self.run_keys,
             self.run_vals, self.run_count, self.bloom, q,
             f=self.f, levels=self.max_levels, run_cap=self.run_cap,
             nbits=self.nbits, h=self.h, steps=self._steps)
+        self.bloom_probes += int(n_probe)
+        self.bloom_negative_skips += int(n_neg)
+        self.bloom_false_positives += int(n_fp)
+        return present, out
 
     def range_query_batch(self, lo, hi, max_results: int = 256):
         """Batched inclusive range scan [lo_b, hi_b] — one fused device call.

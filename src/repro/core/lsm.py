@@ -52,6 +52,11 @@ class LSMTree:
         self._buf: dict = {}
         self.levels: list[_Level] = []
         self.n_inserted = 0
+        # per-level Bloom effectiveness (probes / negative skips / misses
+        # after a positive), surfaced through EngineStats like the NB-tree's.
+        self.bloom_probes = 0
+        self.bloom_negative_skips = 0
+        self.bloom_false_positives = 0
 
     # ---------------------------------------------------------------- inserts
     def insert(self, key, value) -> float:
@@ -131,7 +136,10 @@ class LSMTree:
                 continue
             positive = True
             if self.use_bloom and lvl.bloom is not None:
+                self.bloom_probes += 1
                 positive = bool(lvl.bloom.contains(np.asarray([key]))[0])
+                if not positive:
+                    self.bloom_negative_skips += 1
             if positive:
                 # fence pointers cached in memory: one seek + one leaf page.
                 self.cm.page_read()
@@ -139,6 +147,8 @@ class LSMTree:
                 if i < len(lvl.keys) and lvl.keys[i] == key:
                     v = lvl.vals[i]
                     return None if v == TOMBSTONE else v
+                if self.use_bloom and lvl.bloom is not None:
+                    self.bloom_false_positives += 1
         return None
 
     def range_query(self, lo, hi):

@@ -85,6 +85,13 @@ class NBTree:
         self._frozen: Run | None = None  # buffer snapshot while a cascade is pending
         self._cascade = None             # page-quantum generator
         self.n_inserted = 0
+        # Bloom effectiveness counters (paper Sec. 5.2): every d-tree probe,
+        # the negatives that skipped a run search, and the positives that
+        # searched and missed (false positives).  Query-savings attribution
+        # for nbtree vs nbtree-nobloom runs.
+        self.bloom_probes = 0
+        self.bloom_negative_skips = 0
+        self.bloom_false_positives = 0
 
     # ------------------------------------------------------------------ public
     def insert(self, key, value) -> float:
@@ -214,7 +221,10 @@ class NBTree:
             if node is not self.root and len(node.run) > 0:
                 positive = True
                 if self.use_bloom and node.bloom is not None:
+                    self.bloom_probes += 1
                     positive = bool(node.bloom.contains(np.asarray([key]))[0])
+                    if not positive:
+                        self.bloom_negative_skips += 1
                 if positive:
                     # B+-tree search of the run: internal d-nodes are cached
                     # in memory (paper Sec. 6.2 memory accounting), so one
@@ -223,6 +233,8 @@ class NBTree:
                     v = node.run.lookup(key)
                     if v is not None:
                         return None if v == TOMBSTONE else v
+                    if self.use_bloom and node.bloom is not None:
+                        self.bloom_false_positives += 1
             if node.is_leaf:
                 return None
             node = node.child_for(key)

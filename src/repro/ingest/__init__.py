@@ -1,0 +1,22 @@
+"""Open-loop ingestion frontend (DESIGN.md §7).
+
+The serving layer between workload generation and the storage engines:
+seeded arrival processes (:mod:`.arrivals`), a bounded-queue group-commit
+frontend with admission control on a deterministic simulated clock
+(:mod:`.frontend`), and per-kind SLO accounting with stall attribution
+(:mod:`.slo`).  ``benchmarks/fig_saturation.py`` sweeps offered load
+through this layer to produce throughput-vs-tail-latency curves — the
+operational form of the paper's worst-case insertion-delay claim.
+"""
+from .arrivals import (ARRIVALS, ArrivalProcess, ArrivalTrace,
+                       DiurnalArrivals, MMPPArrivals, PoissonArrivals,
+                       make_arrivals, make_trace)
+from .frontend import FrontendConfig, IngestFrontend, run_open_loop
+from .slo import STALL_FACTOR, SLOTracker
+
+__all__ = [
+    "ARRIVALS", "ArrivalProcess", "ArrivalTrace", "DiurnalArrivals",
+    "MMPPArrivals", "PoissonArrivals", "make_arrivals", "make_trace",
+    "FrontendConfig", "IngestFrontend", "run_open_loop",
+    "STALL_FACTOR", "SLOTracker",
+]

@@ -1,0 +1,209 @@
+"""Open-loop ingest frontend: bounded queue, group commit, simulated clock.
+
+This is the serving layer between workload generation and the storage
+engines (DESIGN.md §7).  A closed-loop driver asks "how long does an op
+take once the engine starts it?"; an open-loop frontend asks the question
+the paper's worst-case-delay claim is actually about: *what latency does a
+request experience when it arrives on its own schedule* — queueing behind
+a compaction stall included.
+
+:class:`IngestFrontend` simulates a single-server ingest node on a
+deterministic clock:
+
+* **Arrivals** come from an :class:`~repro.ingest.arrivals.ArrivalTrace`
+  (timestamped ops).  An op is *admitted* if the bounded ingest queue has
+  room at its arrival instant, else it is **shed** (admission control —
+  the knob that trades availability for bounded memory and bounded tail).
+* **Group commit**: the server coalesces queued ops into an
+  :class:`~repro.core.engine_api.OpBatch` of up to ``commit_ops``,
+  lingering at most ``linger_s`` past the moment it could first serve
+  (classic group commit: size *or* deadline, whichever first).  Arrival
+  order is preserved, so the protocol's sequential batch semantics match
+  the trace's logical order.
+* **Service** is charged from the engine's own accounting: on cost-model
+  tiers (``clock == "sim"``) a batch's service time is the sum of its
+  per-op simulated latencies and maintenance time is the engine's charged
+  I/O delta — so the whole run is a pure function of (trace, engine
+  config) and two runs produce byte-identical reports.  On the wall-clock
+  device tier, real measurements are nondeterministic by nature, so the
+  clock instead uses a fixed *virtual* per-op service time
+  (``virtual_op_service_s``); device rows exercise the full protocol and
+  queueing math deterministically, while their absolute latencies are the
+  surrogate model's, flagged ``service_model: "virtual"`` in reports.
+* **Maintenance** is interleaved once per commit — ``maintain(budget)``
+  on the simulated clock, exactly like the closed-loop driver — and the
+  engine's pending-debt snapshot is recorded at every commit, which is
+  what lets :mod:`repro.ingest.slo` attribute tail latency to stalls and
+  verify the deamortized debt bound under load.
+
+End-to-end latency of op *i* = (commit time + its share of batch service)
+- arrival time = queueing + service; the SLO tracker reports exact
+p50/p99/p99.9/p100 per kind plus queue/shed/stall accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine_api import OpBatch, OpKind, StorageEngine
+
+from .arrivals import ArrivalTrace
+from .slo import SLOTracker
+
+_KIND_NAMES = {int(k): k.name.lower() for k in OpKind}
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Serving-node knobs (defaults sized for benchmark-scale traces)."""
+
+    max_queue: int = 4096          # admission-control bound (ops)
+    commit_ops: int = 64           # group-commit size cap
+    linger_s: float = 1e-3         # group-commit deadline past first-servable
+    maintain_budget: int = 1       # maintenance units interleaved per commit
+    #: deterministic surrogate service time per op for wall-clock engines
+    #: (see module docstring); ignored on sim tiers.
+    virtual_op_service_s: float = 5e-6
+
+    def __post_init__(self):
+        assert self.max_queue >= 1 and self.commit_ops >= 1
+        assert self.commit_ops <= self.max_queue, \
+            "a commit cannot exceed the queue bound"
+        assert self.linger_s >= 0.0 and self.maintain_budget >= 0
+        assert self.virtual_op_service_s > 0.0
+
+
+class IngestFrontend:
+    """Single-server open-loop serving simulation over one engine."""
+
+    def __init__(self, engine: StorageEngine, config: FrontendConfig | None = None):
+        self.engine = engine
+        self.config = config or FrontendConfig()
+        # the engine self-reports its clock domain via stats(); adapters set
+        # a class attribute, so probing one snapshot is cheap and universal.
+        self.sim_clock = engine.stats().clock == "sim"
+
+    # ----------------------------------------------------------------- running
+    def run(self, trace: ArrivalTrace, *, drain: bool = True) -> dict:
+        """Serve ``trace``; returns the JSON-ready open-loop report."""
+        cfg = self.config
+        eng = self.engine
+        tracker = SLOTracker()
+
+        # load phase: closed-loop, before the clock starts (not offered load).
+        if len(trace.preload):
+            eng.apply(trace.preload)
+            eng.drain()
+
+        kinds = np.asarray(trace.ops.kinds)
+        t_arr = np.asarray(trace.t_arrive, np.float64)
+        n = len(kinds)
+        queue: list[int] = []       # FIFO of admitted op indices
+        self._i = 0                 # next arrival not yet admitted/shed
+        t_free = 0.0                # server becomes available at this time
+
+        def admit_until(t: float) -> None:
+            """Admit (or shed) every arrival with t_arrive <= t, in order.
+
+            Occupancy only grows between commits, so evaluating arrivals in
+            timestamp order against the live queue length gives each op the
+            admission decision it would see at its own arrival instant.
+            """
+            i = self._i
+            while i < n and t_arr[i] <= t:
+                if len(queue) < cfg.max_queue:
+                    queue.append(i)
+                    tracker.record_queue_depth(len(queue))
+                else:
+                    tracker.record_shed(_KIND_NAMES[int(kinds[i])])
+                i += 1
+            self._i = i
+
+        while queue or self._i < n:
+            admit_until(t_free)
+            if not queue:
+                # idle: jump the clock to the next arrival (plus any ties).
+                admit_until(t_arr[self._i])
+            t0 = max(t_free, t_arr[queue[0]])
+
+            # ---- group commit: size or deadline, whichever first ----------
+            if len(queue) >= cfg.commit_ops or self._i >= n:
+                t_commit = t0
+            else:
+                deadline = t0 + cfg.linger_s
+                need = cfg.commit_ops - len(queue)
+                j, got = self._i, 0
+                while j < n and t_arr[j] <= deadline and got < need:
+                    j, got = j + 1, got + 1
+                t_commit = max(t0, t_arr[j - 1]) if got == need else deadline
+            admit_until(t_commit)
+
+            take = queue[: cfg.commit_ops]
+            del queue[: len(take)]
+            idx = np.asarray(take, np.int64)
+            batch = OpBatch(kinds[idx], trace.ops.keys[idx],
+                            trace.ops.vals[idx], trace.ops.his[idx])
+
+            # ---- service (engine clock -> simulated clock) ----------------
+            # apply cost is charged through per-op latencies (the engine's
+            # foreground share); maintenance through the charged-I/O delta.
+            res = eng.apply(batch)
+            if self.sim_clock:
+                op_service = np.asarray(res.latency_s, np.float64)
+            else:
+                op_service = np.full(len(idx), cfg.virtual_op_service_s)
+            service_s = float(op_service.sum())
+
+            # ---- interleaved maintenance + debt snapshot ------------------
+            io1 = eng.io_time_s()
+            debt = eng.maintain(cfg.maintain_budget)
+            io2 = eng.io_time_s()
+            if self.sim_clock:
+                maintain_s = io2 - io1
+            else:
+                maintain_s = cfg.virtual_op_service_s * cfg.maintain_budget
+
+            done = t_commit + np.cumsum(op_service)
+            tracker.record_commit(
+                t_commit=t_commit,
+                kinds=[_KIND_NAMES[int(k)] for k in kinds[idx]],
+                e2e_s=done - t_arr[idx],
+                queue_delay_s=t_commit - t_arr[idx],
+                qdepth_after=len(queue),
+                service_s=service_s, maintain_s=maintain_s, debt=int(debt))
+            t_free = t_commit + service_s + maintain_s
+
+        t_end = t_free
+        debt_final = eng.maintain(0)
+        if drain:
+            eng.drain()
+
+        offered = {name: int((kinds == k).sum())
+                   for k, name in _KIND_NAMES.items()}
+        report = tracker.report(offered=offered, t_end=t_end)
+        report["service_model"] = "charged" if self.sim_clock else "virtual"
+        report["pending_debt_at_end"] = int(debt_final)
+        report["config"] = dataclasses.asdict(self.config)
+        return report
+
+
+def run_open_loop(engine: StorageEngine, trace: ArrivalTrace, *,
+                  config: FrontendConfig | None = None) -> dict:
+    """One-call harness: serve ``trace`` on ``engine``, full JSON report.
+
+    The returned dict mirrors the closed-loop driver report shape (engine
+    name, arrival description, final ``stats()`` snapshot) with the
+    open-loop SLO section under ``"open_loop"``.
+    """
+    fe = IngestFrontend(engine, config)
+    ol = fe.run(trace)
+    stats = engine.stats()
+    return {
+        "engine": engine.name,
+        "arrival": dict(trace.arrival),
+        "trace": {"n_ops": len(trace), "duration_s": trace.duration_s,
+                  "seed": trace.seed, "preload_pairs": len(trace.preload)},
+        "open_loop": ol,
+        "stats": dataclasses.asdict(stats),
+    }

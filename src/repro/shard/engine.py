@@ -72,8 +72,9 @@ class ShardedEngine(StorageEngine):
         self._approx_live: list[int] = []   # split trigger only; never exact
         self._inherited_s: list[float] = []
         self.n_splits = 0
-        # monotone I/O of shards retired by rebalances (io_s, seeks, rd, wr)
-        self._retired = [0.0, 0, 0, 0]
+        # monotone counters of shards retired by rebalances
+        # (io_s, seeks, rd, wr, bloom probes / skips / false positives)
+        self._retired = [0.0, 0, 0, 0, 0, 0, 0]
         if partition == "hash":
             self.partitioner = HashPartitioner(shards)
             self._spawn_all()
@@ -235,11 +236,14 @@ class ShardedEngine(StorageEngine):
                 self._approx_live[sid] = len(rk)
                 return False
             q = int(rk[above[0]])
-        st = eng.stats()                        # keep aggregate I/O monotone
+        st = eng.stats()                        # keep aggregate stats monotone
         self._retired[0] += st.io_time_s
         self._retired[1] += st.io_seeks
         self._retired[2] += st.io_bytes_read
         self._retired[3] += st.io_bytes_written
+        self._retired[4] += st.bloom_probes
+        self._retired[5] += st.bloom_negative_skips
+        self._retired[6] += st.bloom_false_positives
         lineage_s = self._inherited_s[sid] + eng.io_time_s()
         left = rk < np.uint64(q)
         a, b = self._make_shard(), self._make_shard()
@@ -286,4 +290,10 @@ class ShardedEngine(StorageEngine):
             n_queries=self._counts[OpKind.QUERY],
             n_ranges=self._counts[OpKind.RANGE],
             shards=len(per) if per else self.n_target,
-            shard_debt=list(debts))
+            shard_debt=list(debts),
+            bloom_probes=self._retired[4] + sum(s.bloom_probes for s in per),
+            bloom_negative_skips=(self._retired[5]
+                                  + sum(s.bloom_negative_skips for s in per)),
+            bloom_false_positives=(self._retired[6]
+                                   + sum(s.bloom_false_positives
+                                         for s in per)))

@@ -15,7 +15,12 @@ CLI (used by the CI benchmark-smoke job)::
 
 ``--shards N`` (N > 1) wraps every requested engine in the sharded layer
 (``sharded:<name>``, DESIGN.md §6) with ``--partition`` choosing range or
-hash placement.  Emitted JSON carries ``schema_version`` (top level and per
+hash placement.  ``--arrival poisson --rate R [--duration T]`` switches
+from closed-loop (service time only) to *open-loop* serving through the
+ingest frontend (``repro.ingest``, DESIGN.md §7): timestamped arrivals,
+bounded queue + admission control, group commit, end-to-end latency =
+queueing + service.  ``--list-engines`` / ``--list-mixes`` enumerate the
+registries.  Emitted JSON carries ``schema_version`` (top level and per
 report) so bench trajectory files are comparable across PRs.
 """
 from __future__ import annotations
@@ -34,7 +39,8 @@ from .generator import MIXES, Workload, make_workload
 
 #: bump when the emitted JSON layout changes (stamped into every report so
 #: trajectory files from different PRs are comparable — or visibly not).
-SCHEMA_VERSION = 2
+#: v3: EngineStats bloom_* counters; open-loop (``--arrival``) reports.
+SCHEMA_VERSION = 3
 
 
 class LatencyHistogram:
@@ -120,6 +126,34 @@ def run_workload(engine: StorageEngine, workload: Workload, *,
     }
 
 
+def run_open_workload(engine: StorageEngine, workload: Workload, *,
+                      arrival: str, rate: float,
+                      duration_s: float | None = None,
+                      maintain_budget: int = 1,
+                      frontend_config=None) -> dict:
+    """Open-loop counterpart of :func:`run_workload` (DESIGN.md §7).
+
+    Timestamps ``workload``'s op stream with the named arrival process and
+    serves it through the ingest frontend; the report mirrors the
+    closed-loop shape with the SLO section under ``"open_loop"``.
+    ``maintain_budget`` (the per-commit deamortization knob) shapes the
+    default frontend config; an explicit ``frontend_config`` wins wholesale.
+    """
+    from repro.ingest import (FrontendConfig, make_arrivals, make_trace,
+                              run_open_loop)
+
+    if frontend_config is None:
+        frontend_config = FrontendConfig(maintain_budget=maintain_budget)
+    process = make_arrivals(arrival, rate)
+    trace = make_trace(workload, process, duration_s=duration_s)
+    report = run_open_loop(engine, trace, config=frontend_config)
+    report["schema_version"] = SCHEMA_VERSION
+    report["workload"] = dataclasses.asdict(workload.spec) | {
+        "mix": {OpKind(k).name.lower(): p
+                for k, p in workload.spec.mix.items()}}
+    return report
+
+
 # ---------------------------------------------------------------- CLI harness
 _SMALL_CONFIGS = {
     # tiny-footprint constructor kwargs for smoke runs (CI, demos).
@@ -134,12 +168,28 @@ _SMALL_CONFIGS = {
 }
 
 
+def _resolve_engine_names(engines, parser: argparse.ArgumentParser) -> tuple:
+    """'all' -> the five paper tiers; anything unknown is a clean CLI error."""
+    if engines == ["all"]:
+        return FIVE_TIERS
+    known = set(available_engines())
+    bad = [n for n in engines if n not in known]
+    if bad:
+        parser.error(f"unknown engine(s): {', '.join(sorted(bad))}; "
+                     f"registered: {', '.join(available_engines())} "
+                     "(--list-engines to enumerate)")
+    return tuple(engines)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--engines", nargs="+", default=["all"],
                     help="engine names, or 'all' for the five paper tiers "
-                         f"({', '.join(FIVE_TIERS)}); registered: "
-                         f"{', '.join(available_engines())}")
+                         f"({', '.join(FIVE_TIERS)}); see --list-engines")
+    ap.add_argument("--list-engines", action="store_true",
+                    help="print the registered engine names and exit")
+    ap.add_argument("--list-mixes", action="store_true",
+                    help="print the named workload mixes and exit")
     ap.add_argument("--mix", default="ycsb-a", choices=sorted(MIXES))
     ap.add_argument("--ops", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=128)
@@ -154,11 +204,32 @@ def main(argv=None) -> None:
                     help="N > 1 wraps each engine as sharded:<name> with N "
                          "range-partitioned shards (DESIGN.md §6)")
     ap.add_argument("--partition", choices=("range", "hash"), default="range")
+    ap.add_argument("--arrival", choices=("poisson", "mmpp", "diurnal"),
+                    default=None,
+                    help="open-loop mode: serve through the ingest frontend "
+                         "with this arrival process (DESIGN.md §7)")
+    ap.add_argument("--rate", type=float, default=10_000.0,
+                    help="open-loop offered rate, ops/second (poisson/"
+                         "diurnal mean; mmpp burst rate)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="open-loop trace window in seconds (default: the "
+                         "full --ops stream)")
     ap.add_argument("--out", default="runs/driver_report.json",
                     help="write the JSON report here")
     args = ap.parse_args(argv)
 
-    names = FIVE_TIERS if args.engines == ["all"] else tuple(args.engines)
+    if args.list_engines:
+        for name in available_engines():
+            print(name)
+        print("sharded:<base>  (any of the above via --shards N)")
+        return
+    if args.list_mixes:
+        for name in sorted(MIXES):
+            kinds = {OpKind(k).name.lower(): p for k, p in MIXES[name].items()}
+            print(f"{name}: {kinds}")
+        return
+
+    names = _resolve_engine_names(args.engines, ap)
     overrides = dict(n_ops=args.ops, batch_size=args.batch,
                      preload=args.preload, key_space=args.key_space,
                      seed=args.seed)
@@ -173,7 +244,24 @@ def main(argv=None) -> None:
                                  partition=args.partition, **base_kw)
         else:
             engine = make_engine(name, **base_kw)
-        report = run_workload(engine, make_workload(args.mix, **overrides),
+        workload = make_workload(args.mix, **overrides)
+        if args.arrival:
+            report = run_open_workload(engine, workload,
+                                       arrival=args.arrival, rate=args.rate,
+                                       duration_s=args.duration,
+                                       maintain_budget=args.maintain_budget)
+            reports.append(report)
+            ol = report["open_loop"]
+            ins = ol["per_kind_e2e"].get("insert", {})
+            print(f"{engine.name:>14} ({report['stats']['clock']}) "
+                  f"{args.mix}+{args.arrival}@{args.rate:g}/s: "
+                  f"util={ol['server']['utilization']:.2f} "
+                  f"shed={ol['n_shed']} "
+                  f"e2e insert p50={ins.get('p50_s', 0)*1e3:.3f}ms "
+                  f"p99.9={ins.get('p999_s', 0)*1e3:.3f}ms "
+                  f"debt_max={ol['stalls']['debt_max']}")
+            continue
+        report = run_workload(engine, workload,
                               maintain_budget=args.maintain_budget)
         reports.append(report)
         pk = report["per_kind"]
@@ -189,6 +277,7 @@ def main(argv=None) -> None:
         with open(args.out, "w") as f:
             json.dump({"schema_version": SCHEMA_VERSION, "mix": args.mix,
                        "seed": args.seed, "shards": args.shards,
+                       "arrival": args.arrival,
                        "reports": reports}, f, indent=1)
         print(f"wrote {args.out}")
 

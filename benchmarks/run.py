@@ -10,9 +10,9 @@ import json
 import os
 import time
 
-from . import (bench_engine, bench_kernels, fig4_fanout, fig5_dtree_size,
-               fig67_insertion, fig89_query, fig_mixed, fig_range,
-               fig_saturation, fig_scaling, table2_theory)
+from . import (bench_engine, bench_ingest_device, bench_kernels, fig4_fanout,
+               fig5_dtree_size, fig67_insertion, fig89_query, fig_mixed,
+               fig_range, fig_saturation, fig_scaling, table2_theory)
 
 SUITES = [
     ("fig4_fanout (Fig 4a/4b)", fig4_fanout),
@@ -26,6 +26,7 @@ SUITES = [
     ("table2_theory (Table 2)", table2_theory),
     ("bench_kernels (Pallas)", bench_kernels),
     ("bench_engine (serving)", bench_engine),
+    ("bench_ingest_device (fused cascade)", bench_ingest_device),
 ]
 
 
@@ -56,6 +57,8 @@ def main() -> None:
             kwargs = fig_saturation.QUICK_KWARGS
         elif args.quick and mod is table2_theory:
             kwargs = {"sizes": (10_000, 30_000, 90_000)}
+        elif args.quick and mod is bench_ingest_device:
+            kwargs = bench_ingest_device.QUICK_KWARGS
         rows = mod.run(**kwargs)
         dt = time.time() - t0
         all_rows[title] = rows

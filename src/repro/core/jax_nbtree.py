@@ -16,6 +16,36 @@ kernels:
                         1/sigma-per-insert deamortization (no allocator or
                         compaction stall can exceed the per-step budget).
 
+Fused maintenance pipeline (DESIGN.md §8): the write path is dispatched the
+same way the query path has been since PR 1 — as a handful of fused jitted
+device calls, not a chatty eager loop.  Each maintenance primitive is ONE
+device dispatch:
+
+  * ``_insert_impl``  — batch sort + root merge + count bump + *incremental*
+                        Bloom update (OR only the batch's bits: O(batch),
+                        not O(run_cap), and bit-identical to a rebuild —
+                        see ``kernels.ref.bloom_update_ref``),
+  * ``_flush_impl``   — the whole emptying cascade step for one node:
+                        duplicate-safe cut, pivot partition, batched
+                        merge-path merge into all <= f children
+                        (``merge_sorted_batch``, a single 2-d-grid kernel
+                        launch), fused tombstone compaction, parent-run
+                        compaction, and child/parent Bloom rebuilds, with
+                        buffer donation on the node tables so no full-table
+                        copy survives the call,
+  * ``_split_impl`` / ``_clear_impl`` / ``_sync_impl`` / ``_grow_impl`` —
+                        run split (+ filters), row clear, structure mirror,
+                        and capacity doubling, one dispatch each.
+
+Host control metadata (node id, child ids, pivots) is routed in as scalars
+and tiny arrays; the only device->host traffic per flush is the returned
+(<= f+1)-element count vector.  Every device computation the index launches
+goes through the ``_device_call`` funnel, so dispatch budgets are
+observable (``DISPATCH_COUNT``) and regression-tested.  The pre-fusion
+eager path is kept under ``fused=False`` as the differential-testing and
+benchmarking baseline (``benchmarks/bench_ingest_device.py`` measures the
+before/after).
+
 Range queries (DESIGN.md §4): ``range_query_batch(lo, hi, max_results)``
 serves inclusive scans ``[lo, hi]`` with the same host/device split as point
 lookups.  The *host control plane* routes each query over its pivot
@@ -48,17 +78,38 @@ from __future__ import annotations
 
 import functools
 import math
+from collections import Counter, deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
-from ..kernels.ref import bloom_hash_ref
+from ..kernels.merge_sorted import merge_sorted as _merge_pair
+from ..kernels.merge_sorted import merge_sorted_batch as _merge_batch
+from ..kernels.ref import bloom_build_ref, bloom_hash_ref
 
 KEY_MAX32 = np.uint32(0xFFFFFFFF)
 TOMBSTONE32 = np.int32(-(2**31))
 TILE = 1024
+
+#: cumulative device dispatches launched through :func:`_device_call` —
+#: the counting shim read by ``benchmarks/bench_ingest_device.py`` and the
+#: dispatch-budget regression test.
+DISPATCH_COUNT = 0
+
+
+def _device_call(fn, *args, **kwargs):
+    """Single funnel for every device computation the index launches.
+
+    One call == one device dispatch (each ``fn`` here is either a fused
+    jitted impl or a single eager XLA op).  Kept as a module-level
+    indirection so benchmarks and tests can monkeypatch or read
+    ``DISPATCH_COUNT`` to assert dispatch budgets.
+    """
+    global DISPATCH_COUNT
+    DISPATCH_COUNT += 1
+    return fn(*args, **kwargs)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -113,15 +164,15 @@ def _build_bloom(keys, nbits: int, h: int):
     return ops.bloom_build(keys, nbits, h)
 
 
-@functools.partial(jax.jit, static_argnames=("cap",))
-def _compact_tombstones(keys, vals, cap: int):
+def _compact_rows(keys, vals, cap: int):
     """Leaf-level delta resolution (Sec. 3.2.2): dedup then drop deletes.
 
     The merge kernel keeps duplicate keys (newest copy leftmost — that is
     what makes leftmost-match point lookups see the freshest record), so a
     leaf run accumulates stale copies.  Compaction must retire the stale
     duplicates *together with* the tombstone records: dropping only the
-    tombstone would resurrect the older copy it deleted.
+    tombstone would resurrect the older copy it deleted.  Traced by both
+    the eager jit wrapper below and (vmapped) the fused flush impl.
     """
     first = jnp.concatenate(
         [jnp.ones(1, bool), keys[1:] != keys[:-1]])   # leftmost = freshest
@@ -131,6 +182,183 @@ def _compact_tombstones(keys, vals, cap: int):
     keys, vals = keys[order], vals[order]
     live = jnp.sum((keys != KEY_MAX32).astype(jnp.int32))
     return keys[:cap], vals[:cap], live
+
+
+_compact_tombstones = jax.jit(_compact_rows, static_argnames=("cap",))
+
+
+# ----------------------------------------------------- fused maintenance impls
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("run_cap", "nbits", "h", "interpret"))
+def _insert_impl(run_keys, run_vals, run_count, bloom, keys, vals, *,
+                 run_cap: int, nbits: int, h: int, interpret: bool):
+    """One-dispatch root ingest: sort batch, merge, incremental Bloom OR."""
+    bk, bv = _prepare_batch(keys, vals)
+    mk, mv = _merge_pair(bk, bv, run_keys[0], run_vals[0], interpret=interpret)
+    run_keys = run_keys.at[0].set(mk[:run_cap])
+    run_vals = run_vals.at[0].set(mv[:run_cap])
+    run_count = run_count.at[0].add(jnp.int32(keys.shape[0]))
+    # O(batch) incremental filter maintenance; == from-scratch rebuild
+    # because OR over a grown key set is associative (DESIGN.md §8).
+    bloom = bloom.at[0].set(ops.bloom_update(bloom[0], bk, nbits, h))
+    return run_keys, run_vals, run_count, bloom
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("nc", "leaf", "sigma", "sigma_pad",
+                                    "run_cap", "nbits", "h", "interpret"))
+def _flush_impl(run_keys, run_vals, run_count, bloom, nid, child_ids, piv,
+                count, *, nc: int, leaf: bool, sigma: int, sigma_pad: int,
+                run_cap: int, nbits: int, h: int, interpret: bool):
+    """One-dispatch emptying-cascade step for one internal node.
+
+    Replaces the eager per-child loop (merge + compact + 3 row writes +
+    full Bloom rebuild per child, with host-synced ``searchsorted`` cuts in
+    the middle, ~25 dispatches at f=4) with a single call: duplicate-safe
+    cut and pivot partition on device, one batched merge across all ``nc``
+    children, vmapped tombstone compaction (leaf level), parent-run
+    compaction, Bloom rebuilds for every touched row.  Untouched children
+    (empty partition) keep rows, counts and filters bit-for-bit, matching
+    the eager path exactly.  Returns the updated tables plus the
+    ``(nc+1,)`` count vector (children then parent) — the only
+    device->host traffic of the whole flush.
+    """
+    row_k = run_keys[nid]
+    row_v = run_vals[nid]
+    # ---- duplicate-safe cut (was 2-3 blocking host round trips) -----------
+    # Never split a duplicate group across the moved boundary: runs keep
+    # duplicate copies newest-first, so flushing the fresh copy while the
+    # stale one stays behind would invert the ancestors-are-fresher rule
+    # both query paths rely on.  Back the cut up to the group start; if the
+    # whole prefix is one key, move the entire group (progress guaranteed:
+    # RUN_CAP >= f*(sigma+1) + sigma gives the child sigma headroom).
+    moved0 = jnp.minimum(count, sigma)
+    k_cut = row_k[jnp.clip(moved0, 0, run_cap - 1)]
+    left = jnp.searchsorted(row_k, k_cut, side="left").astype(jnp.int32)
+    right = jnp.searchsorted(row_k, k_cut, side="right").astype(jnp.int32)
+    adj = jnp.where(left > 0, jnp.minimum(left, moved0),
+                    jnp.minimum(right, count))
+    moved = jnp.where(moved0 < count, adj, moved0)
+
+    # ---- pivot partition of the moved prefix ------------------------------
+    cuts = jnp.minimum(
+        jnp.searchsorted(row_k, piv, side="left").astype(jnp.int32), moved)
+    bounds = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), cuts, jnp.reshape(moved, (1,))])
+    starts, lens = bounds[:-1], bounds[1:] - bounds[:-1]
+
+    def window(start, ln, cap):
+        idx = start + jnp.arange(cap, dtype=jnp.int32)
+        m = jnp.arange(cap, dtype=jnp.int32) < ln
+        return (jnp.where(m, jnp.take(row_k, idx, mode="clip"),
+                          jnp.uint32(KEY_MAX32)),
+                jnp.where(m, jnp.take(row_v, idx, mode="clip"), 0))
+
+    pk, pv = jax.vmap(lambda s, ln: window(s, ln, sigma_pad))(starts, lens)
+
+    # ---- one batched merge across all children ----------------------------
+    ck, cv = run_keys[child_ids], run_vals[child_ids]
+    old_counts = run_count[child_ids]
+    mk, mv = _merge_batch(pk, pv, ck, cv, interpret=interpret)
+    if leaf:
+        mk, mv, new_counts = jax.vmap(
+            lambda k, v: _compact_rows(k, v, run_cap))(mk, mv)
+    else:
+        mk, mv = mk[:, :run_cap], mv[:, :run_cap]
+        new_counts = old_counts + lens
+    touched = lens > 0
+    mk = jnp.where(touched[:, None], mk, ck)
+    mv = jnp.where(touched[:, None], mv, cv)
+    new_counts = jnp.where(touched, new_counts, old_counts)
+    # unrolled over the static child count: measurably faster than vmap for
+    # the scatter-heavy build, and nc <= f is tiny.
+    new_blooms = jnp.stack([bloom_build_ref(mk[i], nbits, h)
+                            for i in range(nc)])
+    new_blooms = jnp.where(touched[:, None], new_blooms, bloom[child_ids])
+
+    # ---- parent remainder (immediate compaction, DESIGN.md §2) ------------
+    rest = count - moved
+    rk, rv = window(moved, rest, run_cap)
+    pb = bloom_build_ref(rk, nbits, h)
+
+    run_keys = run_keys.at[child_ids].set(mk).at[nid].set(rk)
+    run_vals = run_vals.at[child_ids].set(mv).at[nid].set(rv)
+    run_count = run_count.at[child_ids].set(new_counts).at[nid].set(rest)
+    bloom = bloom.at[child_ids].set(new_blooms).at[nid].set(pb)
+    counts = jnp.concatenate([new_counts, jnp.reshape(rest, (1,))])
+    return run_keys, run_vals, run_count, bloom, counts
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("has_key", "run_cap", "nbits", "h"))
+def _split_impl(run_keys, run_vals, run_count, bloom, nid, left_id, right_id,
+                count, at_key, *, has_key: bool, run_cap: int, nbits: int,
+                h: int):
+    """One-dispatch run split: windows, counts and filters for both halves.
+
+    Returns the updated tables plus ``[k_m, cut]`` (uint32) — the split key
+    for the host pivot structure and the left-half length.
+    """
+    row_k = run_keys[nid]
+    row_v = run_vals[nid]
+    if has_key:
+        k_m = at_key
+        cut = jnp.minimum(
+            jnp.searchsorted(row_k, k_m, side="left").astype(jnp.int32),
+            count)
+    else:
+        k_m = row_k[jnp.clip(count // 2, 0, run_cap - 1)]
+        cut = jnp.searchsorted(row_k, k_m, side="left").astype(jnp.int32)
+
+    def window(start, ln):
+        idx = start + jnp.arange(run_cap, dtype=jnp.int32)
+        m = jnp.arange(run_cap, dtype=jnp.int32) < ln
+        return (jnp.where(m, jnp.take(row_k, idx, mode="clip"),
+                          jnp.uint32(KEY_MAX32)),
+                jnp.where(m, jnp.take(row_v, idx, mode="clip"), 0))
+
+    halves_k, halves_v = jax.vmap(window)(
+        jnp.stack([jnp.int32(0), cut]), jnp.stack([cut, count - cut]))
+    ids = jnp.stack([left_id, right_id])
+    run_keys = run_keys.at[ids].set(halves_k)
+    run_vals = run_vals.at[ids].set(halves_v)
+    run_count = run_count.at[ids].set(jnp.stack([cut, count - cut]))
+    bloom = bloom.at[ids].set(
+        jnp.stack([bloom_build_ref(halves_k[i], nbits, h) for i in range(2)]))
+    return (run_keys, run_vals, run_count, bloom,
+            jnp.stack([k_m, cut.astype(jnp.uint32)]))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _clear_impl(run_keys, run_vals, run_count, bloom, nid):
+    """One-dispatch row retire: keys, values, count and filter of one node."""
+    return (run_keys.at[nid].set(jnp.uint32(KEY_MAX32)),
+            run_vals.at[nid].set(jnp.int32(0)),
+            run_count.at[nid].set(0),
+            bloom.at[nid].set(jnp.uint32(0)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _sync_impl(pivots, children, nchild, nid, pv, ch, n):
+    """One-dispatch structure mirror: pivots, child ids, fanout of one node."""
+    return (pivots.at[nid].set(pv), children.at[nid].set(ch),
+            nchild.at[nid].set(n))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _grow_impl(pivots, children, nchild, run_keys, run_vals, run_count, bloom):
+    """One-dispatch capacity doubling of all seven node tables.
+
+    Donating every table lets XLA release each old buffer as soon as its
+    copy lands, so growth never holds 2x of *every* table at once the way
+    seven sequential eager concatenates did.
+    """
+    def pad(t, fill):
+        return jnp.concatenate([t, jnp.full(t.shape, fill, t.dtype)])
+
+    return (pad(pivots, KEY_MAX32), pad(children, 0), pad(nchild, 0),
+            pad(run_keys, KEY_MAX32), pad(run_vals, 0), pad(run_count, 0),
+            pad(bloom, 0))
 
 
 @functools.partial(
@@ -247,10 +475,17 @@ def _range_query_batch_impl(run_keys, run_vals, run_count, nodes, lo, hi, *,
 
 
 class NBTreeIndex:
-    """Composable device-backed NB-tree index (see module docstring)."""
+    """Composable device-backed NB-tree index (see module docstring).
+
+    ``fused=True`` (the default) runs the one-dispatch maintenance
+    pipeline; ``fused=False`` keeps the pre-fusion eager write path —
+    physically identical state, ~25x the dispatches per flush — as the
+    differential-test oracle and benchmark baseline.
+    """
 
     def __init__(self, f: int = 4, sigma: int = 4096, *, bits_per_key: int = 10,
-                 num_hashes: int = 3, max_nodes: int = 256, max_levels: int = 12):
+                 num_hashes: int = 3, max_nodes: int = 256, max_levels: int = 12,
+                 fused: bool = True):
         assert f >= 2 and sigma >= 2 * f
         self.f, self.sigma = f, sigma
         self.h = num_hashes
@@ -259,6 +494,7 @@ class NBTreeIndex:
         self.nbits = _round_up(self.run_cap * bits_per_key, 32 * 128)
         self.max_levels = max_levels
         self._steps = math.ceil(math.log2(self.run_cap + 1)) + 1
+        self._fused = bool(fused)
 
         self.max_nodes = max_nodes
         nw = self.nbits // 32
@@ -272,12 +508,29 @@ class NBTreeIndex:
 
         self.root = _HostNode(0)
         self._next_id = 1
-        self._pending: list[_HostNode] = []   # oversized nodes awaiting work
+        # oversized nodes awaiting work: deque + membership counter so the
+        # hot loop's dequeue and the per-chunk "already queued?" check are
+        # O(1) (they were O(n) list.pop(0) / `in` scans).
+        self._pending: deque[_HostNode] = deque()
+        self._pending_n: Counter = Counter()
         self.n_items = 0
+        self.units_done = 0   # cumulative flush/split work units executed
         # Bloom effectiveness (paper Sec. 5.2); see query_batch.
         self.bloom_probes = 0
         self.bloom_negative_skips = 0
         self.bloom_false_positives = 0
+
+    # --------------------------------------------------------- pending queue
+    def _enqueue(self, node: _HostNode, front: bool = False) -> None:
+        (self._pending.appendleft if front else self._pending.append)(node)
+        self._pending_n[node.nid] += 1
+
+    def _dequeue(self) -> _HostNode:
+        node = self._pending.popleft()
+        self._pending_n[node.nid] -= 1
+        if not self._pending_n[node.nid]:
+            del self._pending_n[node.nid]
+        return node
 
     # ------------------------------------------------------------------ public
     def insert_batch(self, keys, vals) -> None:
@@ -301,19 +554,34 @@ class NBTreeIndex:
         self._insert_chunk(keys, vals)
 
     def _insert_chunk(self, keys, vals) -> None:
-        bk, bv = _prepare_batch(keys, vals)
-        merged_k, merged_v = ops.merge_sorted(
-            bk, bv, self.run_keys[0, : self.run_cap], self.run_vals[0])
-        self.run_keys = _write_row(self.run_keys, 0, merged_k[: self.run_cap])
-        self.run_vals = _write_row(self.run_vals, 0, merged_v[: self.run_cap])
-        self.root.count += int(keys.shape[0])
+        n = int(keys.shape[0])
+        if self._fused:
+            (self.run_keys, self.run_vals, self.run_count, self.bloom) = \
+                _device_call(_insert_impl, self.run_keys, self.run_vals,
+                             self.run_count, self.bloom, keys, vals,
+                             run_cap=self.run_cap, nbits=self.nbits,
+                             h=self.h, interpret=ops._interpret())
+            self.root.count += n
+        else:
+            bk, bv = _device_call(_prepare_batch, keys, vals)
+            merged_k, merged_v = _device_call(
+                ops.merge_sorted, bk, bv,
+                self.run_keys[0, : self.run_cap], self.run_vals[0])
+            self.run_keys = _device_call(
+                _write_row, self.run_keys, 0, merged_k[: self.run_cap])
+            self.run_vals = _device_call(
+                _write_row, self.run_vals, 0, merged_v[: self.run_cap])
+            self.root.count += n
+            self.run_count = _device_call(
+                self.run_count.at[0].set, self.root.count)
+            self.bloom = _device_call(
+                _write_row, self.bloom, 0,
+                _device_call(_build_bloom, self.run_keys[0], self.nbits,
+                             self.h))
         assert self.root.count <= self.run_cap, "root run overflow: call maintain()"
-        self.run_count = self.run_count.at[0].set(self.root.count)
-        self.bloom = _write_row(
-            self.bloom, 0, _build_bloom(self.run_keys[0], self.nbits, self.h))
-        self.n_items += int(keys.shape[0])
-        if self.root.count > self.sigma and self.root not in self._pending:
-            self._pending.append(self.root)
+        self.n_items += n
+        if self.root.count > self.sigma and self.root.nid not in self._pending_n:
+            self._enqueue(self.root)
 
     def delete_batch(self, keys) -> None:
         keys = jnp.asarray(keys, jnp.uint32)
@@ -329,9 +597,9 @@ class NBTreeIndex:
         surfaced through ``EngineStats``.
         """
         q = jnp.asarray(keys, jnp.uint32)
-        present, out, n_probe, n_neg, n_fp = _query_batch_impl(
-            self.pivots, self.nchild, self.children, self.run_keys,
-            self.run_vals, self.run_count, self.bloom, q,
+        present, out, n_probe, n_neg, n_fp = _device_call(
+            _query_batch_impl, self.pivots, self.nchild, self.children,
+            self.run_keys, self.run_vals, self.run_count, self.bloom, q,
             f=self.f, levels=self.max_levels, run_cap=self.run_cap,
             nbits=self.nbits, h=self.h, steps=self._steps)
         self.bloom_probes += int(n_probe)
@@ -366,7 +634,8 @@ class NBTreeIndex:
         nodes = np.full((B, M), -1, np.int32)
         for b, r in enumerate(routes):
             nodes[b, : len(r)] = r
-        return _range_query_batch_impl(
+        return _device_call(
+            _range_query_batch_impl,
             self.run_keys, self.run_vals, self.run_count,
             jnp.asarray(nodes), jnp.asarray(lo), jnp.asarray(hi),
             cap=int(max_results), max_results=int(max_results),
@@ -397,11 +666,14 @@ class NBTreeIndex:
         This is the deamortization knob: a serving loop calls
         ``maintain(k)`` once per step, so index upkeep can never stall a
         step for longer than k units — the paper's bounded worst-case
-        insertion transplanted to the engine level.
+        insertion transplanted to the engine level.  On the fused path a
+        flush unit is ONE device dispatch (plus one tiny count readback)
+        and a split unit at most four — the per-unit dispatch budget is
+        regression-tested.
         """
         units = 0
         while self._pending and units < max_units:
-            node = self._pending.pop(0)
+            node = self._dequeue()
             if node.count <= self.sigma:
                 continue
             units += self._handle_full(node)
@@ -414,6 +686,7 @@ class NBTreeIndex:
     # -------------------------------------------------------- paper operations
     def _handle_full(self, node: _HostNode) -> int:
         """One HandleFullSNode step (Sec. 5.1).  Returns work units done."""
+        self.units_done += 1
         if node.is_leaf:
             if node is self.root:
                 self._split_root_leaf()
@@ -425,10 +698,10 @@ class NBTreeIndex:
         big = int(np.argmax(sizes))
         if sizes[big] > self.sigma:
             # single recursive call — queued as a separate work unit.
-            self._pending.insert(0, node.children[big])
+            self._enqueue(node.children[big], front=True)
         if node.count > self.sigma:
             # node absorbed multiple batches; it still owes another flush.
-            self._pending.append(node)
+            self._enqueue(node)
         return 1
 
     def _alloc(self, parent) -> _HostNode:
@@ -439,73 +712,97 @@ class NBTreeIndex:
         return n
 
     def _grow_tables(self) -> None:
-        new_max = self.max_nodes * 2
-        pad = lambda t, fill: jnp.concatenate(
-            [t, jnp.full((self.max_nodes,) + t.shape[1:], fill, t.dtype)])
-        self.pivots = pad(self.pivots, KEY_MAX32)
-        self.children = pad(self.children, 0)
-        self.nchild = pad(self.nchild, 0)
-        self.run_keys = pad(self.run_keys, KEY_MAX32)
-        self.run_vals = pad(self.run_vals, 0)
-        self.run_count = pad(self.run_count, 0)
-        self.bloom = pad(self.bloom, 0)
-        self.max_nodes = new_max
+        (self.pivots, self.children, self.nchild, self.run_keys,
+         self.run_vals, self.run_count, self.bloom) = _device_call(
+            _grow_impl, self.pivots, self.children, self.nchild,
+            self.run_keys, self.run_vals, self.run_count, self.bloom)
+        self.max_nodes *= 2
 
     def _flush(self, node: _HostNode) -> None:
         """Stream-merge the first sigma live pairs into the children."""
+        if self._fused:
+            self._flush_fused(node)
+        else:
+            self._flush_eager(node)
+
+    def _flush_fused(self, node: _HostNode) -> None:
+        nc = len(node.children)
+        (self.run_keys, self.run_vals, self.run_count, self.bloom,
+         counts) = _device_call(
+            _flush_impl, self.run_keys, self.run_vals, self.run_count,
+            self.bloom, jnp.int32(node.nid),
+            jnp.asarray([c.nid for c in node.children], jnp.int32),
+            jnp.asarray([int(k) for k in node.skeys], jnp.uint32),
+            jnp.int32(node.count),
+            nc=nc, leaf=node.children[0].is_leaf, sigma=self.sigma,
+            sigma_pad=self.sigma_pad, run_cap=self.run_cap,
+            nbits=self.nbits, h=self.h, interpret=ops._interpret())
+        counts = np.asarray(counts)      # the flush's one device->host sync
+        for child, c in zip(node.children, counts[:-1].tolist()):
+            child.count = int(c)
+            assert child.count <= self.run_cap, "child run overflow"
+        node.count = int(counts[-1])
+
+    def _flush_eager(self, node: _HostNode) -> None:
+        """Pre-fusion write path: ~25 dispatches + host syncs per flush."""
         nid = node.nid
         moved = min(node.count, self.sigma)
         row_k, row_v = self.run_keys[nid], self.run_vals[nid]
         if moved < node.count:
-            # Never split a duplicate group across the moved boundary: runs
-            # keep duplicate copies newest-first, so flushing the fresh copy
-            # while the stale one stays behind would invert the
-            # ancestors-are-fresher rule both query paths rely on.  Back the
-            # cut up to the group start; if the whole prefix is one key,
-            # move the entire group (progress is guaranteed, and the child
-            # run has sigma headroom — RUN_CAP >= f*(sigma+1) + sigma).
+            # Never split a duplicate group across the moved boundary (see
+            # _flush_impl).
             k_cut = jnp.uint32(int(row_k[moved]))
-            left = int(jnp.searchsorted(row_k, k_cut, side="left"))
+            left = int(_device_call(jnp.searchsorted, row_k, k_cut,
+                                    side="left"))
             if left > 0:
                 moved = min(left, moved)
             else:
-                moved = min(int(jnp.searchsorted(row_k, k_cut, side="right")),
-                            node.count)
+                moved = min(int(_device_call(jnp.searchsorted, row_k, k_cut,
+                                             side="right")), node.count)
         piv = jnp.asarray([int(k) for k in node.skeys], jnp.uint32)
-        cuts = jnp.minimum(jnp.searchsorted(row_k, piv, side="left"), moved)
+        cuts = jnp.minimum(
+            _device_call(jnp.searchsorted, row_k, piv, side="left"), moved)
         cuts = np.asarray(cuts)                          # host ints, f-1 of them
         bounds = [0, *cuts.tolist(), moved]
         for i, child in enumerate(node.children):
             lo, hi = bounds[i], bounds[i + 1]
             if hi <= lo:
                 continue
-            part_k, part_v = _window(row_k, row_v, jnp.int32(lo),
-                                     jnp.int32(hi - lo), self.sigma_pad)
-            mk, mv = ops.merge_sorted(part_k, part_v,
-                                      self.run_keys[child.nid],
-                                      self.run_vals[child.nid])
+            part_k, part_v = _device_call(_window, row_k, row_v, jnp.int32(lo),
+                                          jnp.int32(hi - lo), self.sigma_pad)
+            mk, mv = _device_call(ops.merge_sorted, part_k, part_v,
+                                  self.run_keys[child.nid],
+                                  self.run_vals[child.nid])
             new_count = child.count + (hi - lo)
             if child.is_leaf:
-                mk, mv, live = _compact_tombstones(mk, mv, self.run_cap)
+                mk, mv, live = _device_call(_compact_tombstones, mk, mv,
+                                            self.run_cap)
                 new_count = int(live)
             else:
                 mk, mv = mk[: self.run_cap], mv[: self.run_cap]
             assert new_count <= self.run_cap, "child run overflow"
-            self.run_keys = _write_row(self.run_keys, child.nid, mk)
-            self.run_vals = _write_row(self.run_vals, child.nid, mv)
+            self.run_keys = _device_call(_write_row, self.run_keys,
+                                         child.nid, mk)
+            self.run_vals = _device_call(_write_row, self.run_vals,
+                                         child.nid, mv)
             child.count = new_count
-            self.run_count = self.run_count.at[child.nid].set(new_count)
-            self.bloom = _write_row(
-                self.bloom, child.nid, _build_bloom(mk, self.nbits, self.h))
+            self.run_count = _device_call(
+                self.run_count.at[child.nid].set, new_count)
+            self.bloom = _device_call(
+                _write_row, self.bloom, child.nid,
+                _device_call(_build_bloom, mk, self.nbits, self.h))
         # the paper advances a lazy watermark; a device row rewrite is a
         # stream copy, so we compact immediately (DESIGN.md §2).
         rest = node.count - moved
-        rk, rv = _window(row_k, row_v, jnp.int32(moved), jnp.int32(rest), self.run_cap)
-        self.run_keys = _write_row(self.run_keys, nid, rk)
-        self.run_vals = _write_row(self.run_vals, nid, rv)
+        rk, rv = _device_call(_window, row_k, row_v, jnp.int32(moved),
+                              jnp.int32(rest), self.run_cap)
+        self.run_keys = _device_call(_write_row, self.run_keys, nid, rk)
+        self.run_vals = _device_call(_write_row, self.run_vals, nid, rv)
         node.count = rest
-        self.run_count = self.run_count.at[nid].set(rest)
-        self.bloom = _write_row(self.bloom, nid, _build_bloom(rk, self.nbits, self.h))
+        self.run_count = _device_call(self.run_count.at[nid].set, rest)
+        self.bloom = _device_call(
+            _write_row, self.bloom, nid,
+            _device_call(_build_bloom, rk, self.nbits, self.h))
 
     def _split_root_leaf(self) -> None:
         """First split: the root leaf becomes a root with two leaf children."""
@@ -570,33 +867,62 @@ class NBTreeIndex:
         return k_m
 
     def _split_run(self, node, left, right, at_key: int | None = None) -> int:
+        if self._fused:
+            has_key = at_key is not None
+            (self.run_keys, self.run_vals, self.run_count, self.bloom,
+             out) = _device_call(
+                _split_impl, self.run_keys, self.run_vals, self.run_count,
+                self.bloom, jnp.int32(node.nid), jnp.int32(left.nid),
+                jnp.int32(right.nid), jnp.int32(node.count),
+                jnp.uint32(at_key if has_key else 0),
+                has_key=has_key, run_cap=self.run_cap, nbits=self.nbits,
+                h=self.h)
+            out = np.asarray(out)        # the split's one device->host sync
+            k_m, cut = int(out[0]), int(out[1])
+            left.count, right.count = cut, node.count - cut
+            return k_m
         nid = node.nid
         row_k, row_v = self.run_keys[nid], self.run_vals[nid]
         if at_key is None:
             mid = node.count // 2
             k_m = int(np.asarray(row_k[mid]))
-            cut = int(np.asarray(jnp.searchsorted(row_k, jnp.uint32(k_m), side="left")))
+            cut = int(np.asarray(_device_call(
+                jnp.searchsorted, row_k, jnp.uint32(k_m), side="left")))
         else:
             k_m = int(at_key)
-            cut = int(np.asarray(jnp.searchsorted(row_k, jnp.uint32(k_m), side="left")))
+            cut = int(np.asarray(_device_call(
+                jnp.searchsorted, row_k, jnp.uint32(k_m), side="left")))
             cut = min(cut, node.count)
         for dst, lo, ln in ((left, 0, cut), (right, cut, node.count - cut)):
-            dk, dv = _window(row_k, row_v, jnp.int32(lo), jnp.int32(ln), self.run_cap)
-            self.run_keys = _write_row(self.run_keys, dst.nid, dk)
-            self.run_vals = _write_row(self.run_vals, dst.nid, dv)
+            dk, dv = _device_call(_window, row_k, row_v, jnp.int32(lo),
+                                  jnp.int32(ln), self.run_cap)
+            self.run_keys = _device_call(_write_row, self.run_keys, dst.nid, dk)
+            self.run_vals = _device_call(_write_row, self.run_vals, dst.nid, dv)
             dst.count = ln
-            self.run_count = self.run_count.at[dst.nid].set(ln)
-            self.bloom = _write_row(self.bloom, dst.nid, _build_bloom(dk, self.nbits, self.h))
+            self.run_count = _device_call(self.run_count.at[dst.nid].set, ln)
+            self.bloom = _device_call(
+                _write_row, self.bloom, dst.nid,
+                _device_call(_build_bloom, dk, self.nbits, self.h))
         return k_m
 
     def _clear_run(self, node) -> None:
         nid = node.nid
-        self.run_keys = _write_row(
-            self.run_keys, nid, jnp.full(self.run_cap, KEY_MAX32, jnp.uint32))
-        self.run_vals = _write_row(self.run_vals, nid, jnp.zeros(self.run_cap, jnp.int32))
+        if self._fused:
+            (self.run_keys, self.run_vals, self.run_count, self.bloom) = \
+                _device_call(_clear_impl, self.run_keys, self.run_vals,
+                             self.run_count, self.bloom, jnp.int32(nid))
+        else:
+            self.run_keys = _device_call(
+                _write_row, self.run_keys, nid,
+                jnp.full(self.run_cap, KEY_MAX32, jnp.uint32))
+            self.run_vals = _device_call(
+                _write_row, self.run_vals, nid,
+                jnp.zeros(self.run_cap, jnp.int32))
+            self.run_count = _device_call(self.run_count.at[nid].set, 0)
+            self.bloom = _device_call(
+                _write_row, self.bloom, nid,
+                jnp.zeros(self.nbits // 32, jnp.uint32))
         node.count = 0
-        self.run_count = self.run_count.at[nid].set(0)
-        self.bloom = _write_row(self.bloom, nid, jnp.zeros(self.nbits // 32, jnp.uint32))
 
     def _sync_structure(self, node: _HostNode) -> None:
         """Mirror a host node's pivots/children into the device tables."""
@@ -607,9 +933,18 @@ class NBTreeIndex:
             pv[i] = np.uint32(k)
         for i, c in enumerate(node.children[: self.f]):
             ch[i] = c.nid
-        self.pivots = self.pivots.at[nid].set(jnp.asarray(pv))
-        self.children = self.children.at[nid].set(jnp.asarray(ch))
-        self.nchild = self.nchild.at[nid].set(len(node.children))
+        if self._fused:
+            (self.pivots, self.children, self.nchild) = _device_call(
+                _sync_impl, self.pivots, self.children, self.nchild,
+                jnp.int32(nid), jnp.asarray(pv), jnp.asarray(ch),
+                jnp.int32(len(node.children)))
+        else:
+            self.pivots = _device_call(self.pivots.at[nid].set,
+                                       jnp.asarray(pv))
+            self.children = _device_call(self.children.at[nid].set,
+                                         jnp.asarray(ch))
+            self.nchild = _device_call(self.nchild.at[nid].set,
+                                       len(node.children))
 
     # ------------------------------------------------------------- invariants
     def check_invariants(self) -> None:

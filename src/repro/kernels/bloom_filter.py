@@ -5,9 +5,14 @@ nearly free relative to run searches.  On TPU the probe is a handful of VPU
 ops: h rounds of 32-bit multiply-xorshift mixing, one dynamic gather from the
 VMEM-resident bit-array, one bit test — all batched over a query tile.
 
-Filter build (OR-scatter) happens once per flush, off the query critical
-path, and stays in XLA (kernels/ref.py::bloom_build_ref is the production
-build path as well as the oracle).
+Filter maintenance is two-speed and stays in XLA (kernels/ref.py holds the
+production paths as well as the oracles): a from-scratch *build*
+(``bloom_build_ref``, OR-scatter over a whole run) runs only when a run row
+is rewritten — inside the fused emptying cascade, once per touched child —
+while per-insert-batch maintenance is the O(batch) incremental *update*
+(``bloom_update_ref``), which ORs only the new keys' bits into the root
+filter and is bit-identical to rebuilding over the grown run (the
+incremental-Bloom invariant of DESIGN.md §8).
 """
 from __future__ import annotations
 

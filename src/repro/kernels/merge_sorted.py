@@ -14,6 +14,11 @@ Tie-break: equal keys take the ``a`` element first — ``a`` is the newer
 stream, so leftmost-match queries see the freshest record (delta-record
 resolution, paper Sec. 3.2.2).
 
+Two entry points share the kernel body: ``merge_sorted`` (one pair of runs,
+1-d output-tile grid) and ``merge_sorted_batch`` (R independent pairs on a
+2-d ``(run, out-tile)`` grid — the one-dispatch fan-out the fused NB-tree
+emptying cascade uses to merge all children of a node at once).
+
 VMEM budget: both runs (keys+values, uint32/int32) fully resident:
 4 arrays x 64 Ki x 4 B = 1 MiB at sigma = 64 Ki pairs — comfortably inside
 the ~128 MiB/core VMEM of v5e, leaving room for double-buffered output tiles.
@@ -40,13 +45,16 @@ def _take(arr, idx):
 
 
 def _merge_kernel(a_keys_ref, a_vals_ref, b_keys_ref, b_vals_ref,
-                  ok_ref, ov_ref, *, n: int, m: int, steps: int):
+                  ok_ref, ov_ref, *, n: int, m: int, steps: int,
+                  batched: bool = False):
     a = a_keys_ref[...].reshape(-1)
     b = b_keys_ref[...].reshape(-1)
     av = a_vals_ref[...].reshape(-1)
     bv = b_vals_ref[...].reshape(-1)
 
-    tile = pl.program_id(0)
+    # batched entry runs a (run, out-tile) grid; the run axis is resolved by
+    # the BlockSpecs, so the kernel body only needs its output-tile index.
+    tile = pl.program_id(1 if batched else 0)
     row = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
     k = tile * TILE + row * LANES + col  # global output index, (8, 128)
@@ -68,12 +76,12 @@ def _merge_kernel(a_keys_ref, a_vals_ref, b_keys_ref, b_vals_ref,
     a_i = _take(a, jnp.clip(i, 0, n - 1))
     b_j = _take(b, jnp.clip(j, 0, m - 1))
     take_a = (j >= m) | ((i < n) & (a_i <= b_j))
-    ok_ref[...] = jnp.where(take_a, a_i, b_j)
+    ok_ref[...] = jnp.where(take_a, a_i, b_j).reshape(ok_ref.shape)
     ov_ref[...] = jnp.where(
         take_a,
         _take(av, jnp.clip(i, 0, n - 1)),
         _take(bv, jnp.clip(j, 0, m - 1)),
-    )
+    ).reshape(ov_ref.shape)
 
 
 def _pad_run(keys, vals, pad_to):
@@ -123,3 +131,59 @@ def merge_sorted(a_keys, a_vals, b_keys, b_vals, *, interpret: bool = True):
         interpret=interpret,
     )(a2, av2, b2, bv2)
     return ok.reshape(-1), ov.reshape(-1)
+
+
+def _pad_runs_2d(keys, vals, pad_to):
+    n = keys.shape[1]
+    if n == pad_to:
+        return keys, vals
+    pad = ((0, 0), (0, pad_to - n))
+    return (jnp.pad(keys, pad, constant_values=KEY_MAX32),
+            jnp.pad(vals, pad, constant_values=0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_sorted_batch(a_keys, a_vals, b_keys, b_vals, *, interpret: bool = True):
+    """Merge R independent pairs of sorted runs in ONE kernel launch.
+
+    ``a_keys``/``a_vals`` are ``(R, n)``, ``b_keys``/``b_vals`` ``(R, m)``;
+    returns ``(R, n+m)`` merged runs (both dims padded to TILE multiples,
+    KEY_MAX tails).  Row r is exactly ``merge_sorted(a[r], b[r])`` — same
+    merge-path formulation, same a-first tie-break — on a 2-d
+    ``(run, out-tile)`` grid, which is what lets the NB-tree emptying
+    cascade merge all <= f children of a node in a single device dispatch
+    instead of one launch per child.
+    """
+    R, n_raw = a_keys.shape
+    m_raw = b_keys.shape[1]
+    assert b_keys.shape[0] == R
+    n = max(TILE, -(-n_raw // TILE) * TILE)
+    m = max(TILE, -(-m_raw // TILE) * TILE)
+    a_keys, a_vals = _pad_runs_2d(a_keys, a_vals, n)
+    b_keys, b_vals = _pad_runs_2d(b_keys, b_vals, m)
+
+    total = n + m
+    steps = math.ceil(math.log2(max(n, m) + 1)) + 1
+    kernel = functools.partial(_merge_kernel, n=n, m=m, steps=steps,
+                               batched=True)
+
+    a2 = a_keys.reshape(R, n // LANES, LANES)
+    b2 = b_keys.reshape(R, m // LANES, LANES)
+    av2 = a_vals.reshape(R, n // LANES, LANES)
+    bv2 = b_vals.reshape(R, m // LANES, LANES)
+
+    full = lambda rows: pl.BlockSpec((1, rows, LANES), lambda r, t: (r, 0, 0))
+    out_spec = pl.BlockSpec((1, SUBLANES, LANES), lambda r, t: (r, t, 0))
+    ok, ov = pl.pallas_call(
+        kernel,
+        grid=(R, total // TILE),
+        in_specs=[full(n // LANES), full(n // LANES),
+                  full(m // LANES), full(m // LANES)],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, total // LANES, LANES), jnp.uint32),
+            jax.ShapeDtypeStruct((R, total // LANES, LANES), a_vals.dtype),
+        ],
+        interpret=interpret,
+    )(a2, av2, b2, bv2)
+    return ok.reshape(R, total), ov.reshape(R, total)

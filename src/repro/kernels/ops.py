@@ -11,9 +11,10 @@ import jax
 
 from .bloom_filter import bloom_probe as _bloom_probe
 from .merge_sorted import merge_sorted as _merge_sorted
+from .merge_sorted import merge_sorted_batch as _merge_sorted_batch
 from .paged_attention import paged_attention as _paged_attention
 from .range_scan import range_scan as _range_scan
-from .ref import bloom_build_ref
+from .ref import bloom_build_ref, bloom_update_ref
 from .sorted_search import sorted_search as _sorted_search
 
 
@@ -23,6 +24,12 @@ def _interpret() -> bool:
 
 def merge_sorted(a_keys, a_vals, b_keys, b_vals):
     return _merge_sorted(a_keys, a_vals, b_keys, b_vals, interpret=_interpret())
+
+
+def merge_sorted_batch(a_keys, a_vals, b_keys, b_vals):
+    """Merge R pairs of sorted runs in one launch (fused-flush fan-out)."""
+    return _merge_sorted_batch(a_keys, a_vals, b_keys, b_vals,
+                               interpret=_interpret())
 
 
 def sorted_search(run_keys, run_vals, queries):
@@ -39,8 +46,18 @@ def bloom_probe(words, queries, *, nbits: int, h: int = 3):
 
 
 def bloom_build(keys, nbits: int, h: int = 3):
-    """Filter build: once-per-flush XLA path (see bloom_filter.py docstring)."""
+    """Filter build: once-per-rewrite XLA path (see bloom_filter.py docstring)."""
     return bloom_build_ref(keys, nbits, h)
+
+
+def bloom_update(words, keys, nbits: int, h: int = 3):
+    """Incremental filter maintenance: OR a batch's bits into ``words``.
+
+    O(batch) instead of O(run_cap); bit-identical to a from-scratch rebuild
+    over the grown run (see ref.bloom_update_ref) — the per-insert-batch
+    path of the fused ingest pipeline.
+    """
+    return bloom_update_ref(words, keys, nbits, h)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, seq_lens):

@@ -90,22 +90,35 @@ def bloom_hash_ref(keys, h: int, nbits: int):
 def bloom_build_ref(keys, nbits: int, h: int = 3):
     """Bloom bit array as (nbits//32,) uint32 words.
 
-    OR-scatter realized as 32 per-bit-plane max-scatters (each plane is 0/1,
-    where max == OR); XLA fuses these well and build runs once per flush,
-    off the query critical path.
+    OR-scatter realized as ONE 0/1 max-scatter into an (nbits,) cell array
+    (max == OR on single bits) followed by a 32-cells-per-word pack — each
+    cell lands on a distinct bit, so the shifted sum carries nothing and
+    equals the bitwise OR.  ~30x faster than the per-bit-plane scatter loop
+    it replaced (one scatter instead of 32) with a bit-identical layout:
+    bit ``pos % 32`` of word ``pos // 32``.  Build runs on every run
+    rewrite inside the fused emptying cascade, so it IS on the ingest
+    critical path; per-batch root maintenance uses the O(batch)
+    ``bloom_update_ref`` instead.
     """
     assert nbits % 32 == 0
     pos = bloom_hash_ref(keys, h, nbits).reshape(-1)      # h-major (h*N,)
     valid = jnp.tile(keys != KEY_MAX32, (h,))
-    word = pos // 32
-    bitpos = pos % 32
-    nwords = nbits // 32
-    words = jnp.zeros(nwords, jnp.uint32)
-    for b in range(32):
-        sel = (valid & (bitpos == b)).astype(jnp.uint32)
-        plane = jnp.zeros(nwords, jnp.uint32).at[word].max(sel)
-        words = words | (plane << b)
-    return words
+    cells = jnp.zeros(nbits, jnp.uint32).at[pos].max(valid.astype(jnp.uint32))
+    return (cells.reshape(-1, 32) << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def bloom_update_ref(words, keys, nbits: int, h: int = 3):
+    """OR ``keys``' bits into an existing filter — O(batch), not O(run).
+
+    A Bloom filter of a key set is the bitwise OR of its members' bit
+    patterns, so ``update(build(S), B) == build(S ∪ B)`` *exactly* (not
+    merely a superset): a run that only ever grows between rewrites can
+    maintain its filter incrementally per insert batch and stay
+    bit-identical to a from-scratch rebuild.  That identity is the fused
+    ingest path's Bloom invariant (DESIGN.md §8) and is property-tested.
+    """
+    return words | bloom_build_ref(keys, nbits, h)
 
 
 def bloom_probe_ref(words, queries, nbits: int, h: int = 3):

@@ -73,8 +73,9 @@ class ShardedEngine(StorageEngine):
         self._inherited_s: list[float] = []
         self.n_splits = 0
         # monotone counters of shards retired by rebalances
-        # (io_s, seeks, rd, wr, bloom probes / skips / false positives)
-        self._retired = [0.0, 0, 0, 0, 0, 0, 0]
+        # (io_s, seeks, rd, wr, bloom probes / skips / false positives,
+        #  maintain units, maintain wall seconds)
+        self._retired = [0.0, 0, 0, 0, 0, 0, 0, 0, 0.0]
         if partition == "hash":
             self.partitioner = HashPartitioner(shards)
             self._spawn_all()
@@ -244,6 +245,8 @@ class ShardedEngine(StorageEngine):
         self._retired[4] += st.bloom_probes
         self._retired[5] += st.bloom_negative_skips
         self._retired[6] += st.bloom_false_positives
+        self._retired[7] += st.maintain_units
+        self._retired[8] += st.maintain_wall_s
         lineage_s = self._inherited_s[sid] + eng.io_time_s()
         left = rk < np.uint64(q)
         a, b = self._make_shard(), self._make_shard()
@@ -296,4 +299,18 @@ class ShardedEngine(StorageEngine):
                                   + sum(s.bloom_negative_skips for s in per)),
             bloom_false_positives=(self._retired[6]
                                    + sum(s.bloom_false_positives
-                                         for s in per)))
+                                         for s in per)),
+            # units/wall sum across shards (retired predecessors folded in,
+            # keeping the aggregate monotone across rebalances); percentiles
+            # take the per-shard max (units run shard-local — a conservative
+            # ensemble tail).
+            maintain_units=self._retired[7] + sum(s.maintain_units
+                                                  for s in per),
+            maintain_wall_s=self._retired[8] + sum(s.maintain_wall_s
+                                                   for s in per),
+            maintain_unit_p50_s=max((s.maintain_unit_p50_s for s in per),
+                                    default=0.0),
+            maintain_unit_p99_s=max((s.maintain_unit_p99_s for s in per),
+                                    default=0.0),
+            maintain_unit_p100_s=max((s.maintain_unit_p100_s for s in per),
+                                     default=0.0))

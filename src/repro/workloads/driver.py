@@ -40,7 +40,9 @@ from .generator import MIXES, Workload, make_workload
 #: bump when the emitted JSON layout changes (stamped into every report so
 #: trajectory files from different PRs are comparable — or visibly not).
 #: v3: EngineStats bloom_* counters; open-loop (``--arrival``) reports.
-SCHEMA_VERSION = 3
+#: v4: EngineStats maintain-unit wall-clock fields (units, total,
+#: p50/p99/p100 per unit) — real device-tier maintenance service cost.
+SCHEMA_VERSION = 4
 
 
 class LatencyHistogram:

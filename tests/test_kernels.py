@@ -38,6 +38,38 @@ def test_merge_tiebreak_a_first():
     assert list(np.array(ov)[:6]) == [1, 2, -1, 3, -2, -3]
 
 
+@pytest.mark.parametrize("R,n,m", [(1, 64, 64), (3, 100, 57), (5, 700, 1500),
+                                   (8, 1024, 1024)])
+def test_merge_batch_matches_per_row(rng, R, n, m):
+    """merge_sorted_batch row r == merge_sorted(a[r], b[r]), bit for bit."""
+    aks = [_sorted_run(rng, n) for _ in range(R)]
+    bks = [_sorted_run(rng, m) for _ in range(R)]
+    avs = [rng.integers(0, 2**31, n).astype(np.int32) for _ in range(R)]
+    bvs = [rng.integers(0, 2**31, m).astype(np.int32) for _ in range(R)]
+    ok, ov = ops.merge_sorted_batch(
+        jnp.asarray(np.stack(aks)), jnp.asarray(np.stack(avs)),
+        jnp.asarray(np.stack(bks)), jnp.asarray(np.stack(bvs)))
+    for r in range(R):
+        sk, sv = ops.merge_sorted(jnp.array(aks[r]), jnp.array(avs[r]),
+                                  jnp.array(bks[r]), jnp.array(bvs[r]))
+        assert np.array_equal(np.array(ok[r])[: n + m], np.array(sk)[: n + m])
+        assert np.array_equal(np.array(ov[r])[: n + m], np.array(sv)[: n + m])
+
+
+def test_merge_batch_empty_run_identity(rng):
+    """Merging an all-KEY_MAX (empty) a-run returns b unchanged per row —
+    the fused flush relies on this for untouched children."""
+    m = 512
+    bk = np.stack([_sorted_run(rng, m) for _ in range(3)])
+    bv = rng.integers(0, 2**31, (3, m)).astype(np.int32)
+    ak = np.full((3, 128), 0xFFFFFFFF, np.uint32)
+    av = np.zeros((3, 128), np.int32)
+    ok, ov = ops.merge_sorted_batch(jnp.asarray(ak), jnp.asarray(av),
+                                    jnp.asarray(bk), jnp.asarray(bv))
+    assert np.array_equal(np.array(ok)[:, :m], bk)
+    assert np.array_equal(np.array(ov)[:, :m], bv)
+
+
 def _check_merge_property(n, m, seed):
     rng = np.random.default_rng(seed)
     ak, bk = _sorted_run(rng, n), _sorted_run(rng, m)

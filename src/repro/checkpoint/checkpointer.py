@@ -14,9 +14,30 @@ unsharded (test scale) or per-shard with the shard grid recorded; load
 re-shards via jax.device_put with the target NamedSharding — this is the
 elastic-resize path (distributed/fault_tolerance.py).
 
-Async: ``save(..., blocking=False)`` snapshots to host then writes on a
-daemon thread; ``wait()`` joins.  A save is atomic: data lands in a temp
-dir, renamed after the manifest fsync (restart-safe).
+Async: ``save(..., blocking=False)`` snapshots to host *and mutates the
+manifest* synchronously, then writes files on a daemon thread; ``wait()``
+joins, and every reader (``restore``/``latest_step``) waits first, so the
+background writer never races a reader.
+
+Atomicity protocol (crash-safe at every point; the crash matrix in
+``tests/test_durability.py`` kills inside it):
+
+1. leaves land in ``.tmp_step_<N>/``, each file fsynced, then the dir;
+2. the manifest (which proves exactly which leaves step N owns) is written
+   to temp names, fsynced, and atomically renamed into place;
+3. the step dir is renamed ``.tmp_step_<N>`` -> ``step_<N>`` *after* the
+   manifest fsync, and the parent dir is fsynced.
+
+A crash between 2 and 3 leaves a ``.tmp_step_<N>`` the manifest fully
+proves: ``__init__`` *rolls it forward* (finishes the rename).  A crash
+before 2 leaves an unprovable temp dir: ``__init__`` deletes it.  Either
+way ``latest_step()`` — which answers from the manifest, not a directory
+listing — only ever names steps that can actually be restored.
+
+``EngineCheckpointer`` keys snapshots by *commit LSN* instead of train
+step: the durability subsystem (``repro.wal``, DESIGN.md §9) checkpoints a
+storage engine's live table through it and truncates the WAL past the
+snapshot LSN.
 """
 from __future__ import annotations
 
@@ -25,16 +46,25 @@ import os
 import shutil
 import threading
 
-import jax
 import numpy as np
 
 from ..core.cost_model import CostModel, Device
 from ..core.refimpl import NBTree
+from ..wal.faults import CrashPoint, FaultInjector, reach as _reach
 
 _NULL_DEVICE = Device("null", page_bytes=4096, seek_s=0.0, read_bw=1e18, write_bw=1e18)
 
+#: leaf index occupies the low bits of a manifest key; step the high bits.
+_LEAF_BITS = 20
+
+
+class CheckpointError(RuntimeError):
+    """A restore/validation failure (never a bare ``assert`` — those vanish
+    under ``python -O`` and turn a corrupt restore into silent bad state)."""
+
 
 def _flatten(tree):
+    import jax
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for kp, leaf in flat:
@@ -44,23 +74,41 @@ def _flatten(tree):
 
 
 def _key_of(step: int, leaf_idx: int) -> int:
-    return (step << 20) | leaf_idx
+    return (step << _LEAF_BITS) | leaf_idx
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    _fsync_file(path)       # on POSIX a directory fd fsyncs its entries
 
 
 class Checkpointer:
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, *,
+                 injector: FaultInjector | None = None):
         self.dir = directory
+        self.injector = injector
         os.makedirs(directory, exist_ok=True)
         # zero-cost NB-tree (manifest ops are host metadata, not disk sim).
         self.manifest = NBTree(f=4, sigma=1024, cost=CostModel(_NULL_DEVICE),
                                use_bloom=False)
         self.leaf_names: list[str] = []
+        self._leaf_idx: dict[str, int] = {}     # O(1) path -> index
+        self.known_steps: set[int] = set()      # steps the manifest proves
         self._thread: threading.Thread | None = None
         self._load_manifest()
+        self._cleanup_tmp()
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, tree, *, blocking: bool = True) -> None:
         self.wait()
+        import jax
         flat = _flatten(tree)
 
         def to_host(l):
@@ -71,26 +119,43 @@ class Checkpointer:
 
         host = {p: to_host(l) for p, l in flat.items()}  # device->host snap
 
+        # manifest mutation happens HERE, in the synchronous snapshot phase:
+        # the daemon thread only writes files, so restore()/latest_step()
+        # never observe a half-mutated manifest (they also wait() first).
+        for path in host:
+            if path not in self._leaf_idx:
+                self._leaf_idx[path] = len(self.leaf_names)
+                self.leaf_names.append(path)
+            self.manifest.insert(_key_of(step, self._leaf_idx[path]), step)
+        self.known_steps.add(step)
+        mkeys, mvals = self._manifest_arrays()
+        names = list(self.leaf_names)
+
         def write():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step}")
-            os.makedirs(tmp, exist_ok=True)
-            for path, arr in host.items():
-                np.save(os.path.join(tmp, path + ".npy"), arr)
-                if path not in self.leaf_names:
-                    self.leaf_names.append(path)
-                self.manifest.insert(_key_of(step, self.leaf_names.index(path)),
-                                     step)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._write_manifest(step)
+            self._write(step, host, mkeys, mvals, names)
 
         if blocking:
             write()
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
+
+    def _write(self, step: int, host: dict, mkeys, mvals, names) -> None:
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        for path, arr in host.items():
+            fp = os.path.join(tmp, path + ".npy")
+            np.save(fp, arr)
+            _fsync_file(fp)
+        _fsync_dir(tmp)
+        _reach(self.injector, CrashPoint.MID_CHECKPOINT)
+        self._write_manifest_files(step, mkeys, mvals, names)
+        _reach(self.injector, CrashPoint.BEFORE_CHECKPOINT_RENAME)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)               # rename AFTER the manifest fsync
+        _fsync_dir(self.dir)
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -99,8 +164,14 @@ class Checkpointer:
 
     # -------------------------------------------------------------- restore
     def latest_step(self) -> int | None:
-        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
-                 if d.startswith("step_")]
+        """Newest step the manifest proves *and* whose data dir exists."""
+        self.wait()
+        steps = [s for s in self.known_steps
+                 if os.path.isdir(os.path.join(self.dir, f"step_{s}"))]
+        if not steps:
+            # manifest-less legacy layout: fall back to a directory listing.
+            steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                     if d.startswith("step_") and d.split("_")[1].isdigit()]
         return max(steps) if steps else None
 
     def restore(self, step: int, like, shardings=None):
@@ -108,18 +179,30 @@ class Checkpointer:
 
         ``shardings``: optional pytree of NamedSharding for a (possibly
         different) target mesh — the elastic-resize entry point.
+
+        Raises :class:`CheckpointError` on any validation failure (missing
+        manifest record, missing file, shape mismatch) — real exceptions,
+        not ``assert``, so ``python -O`` cannot silence a corrupt restore.
         """
+        import jax
         self.wait()
         d = os.path.join(self.dir, f"step_{step}")
         flat = _flatten(like)
         host = {}
         for path, leaf in flat.items():
             # manifest point query proves the leaf belongs to this step.
-            idx = self.leaf_names.index(path)
-            assert self.manifest.get(_key_of(step, idx)) is not None, (
-                f"manifest missing {path} @ step {step}")
-            arr = np.load(os.path.join(d, path + ".npy"))
-            assert arr.shape == tuple(leaf.shape), (path, arr.shape, leaf.shape)
+            idx = self._leaf_idx.get(path)
+            if idx is None or self.manifest.get(_key_of(step, idx)) is None:
+                raise CheckpointError(
+                    f"manifest missing {path!r} @ step {step}")
+            fp = os.path.join(d, path + ".npy")
+            if not os.path.exists(fp):
+                raise CheckpointError(f"leaf file missing: {fp}")
+            arr = np.load(fp)
+            if arr.shape != tuple(leaf.shape):
+                raise CheckpointError(
+                    f"shape mismatch for {path!r} @ step {step}: "
+                    f"saved {arr.shape}, expected {tuple(leaf.shape)}")
             host[path] = arr
 
         def rebuild(tree, sh_tree):
@@ -142,7 +225,7 @@ class Checkpointer:
         return rebuild(like, shardings)
 
     # ------------------------------------------------------------- manifest
-    def _write_manifest(self, step: int) -> None:
+    def _manifest_arrays(self):
         keys, vals = [], []
         stack = [self.manifest.root]
         while stack:
@@ -152,10 +235,22 @@ class Checkpointer:
             stack.extend(n.children)
         keys.extend(int(k) for k in self.manifest._buf.keys())
         vals.extend(int(v) for v in self.manifest._buf.values())
-        np.savez(os.path.join(self.dir, "manifest.npz"),
-                 keys=np.asarray(keys, np.uint64), vals=np.asarray(vals, np.int64))
-        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
-            json.dump({"leaf_names": self.leaf_names, "last_step": step}, f)
+        return (np.asarray(keys, np.uint64), np.asarray(vals, np.int64))
+
+    def _write_manifest_files(self, step, mkeys, mvals, names) -> None:
+        """Atomically replace manifest.npz/.json, fsyncing each."""
+        npz, jsn = (os.path.join(self.dir, "manifest.npz"),
+                    os.path.join(self.dir, "manifest.json"))
+        np.savez(npz + ".tmp.npz", keys=mkeys, vals=mvals)
+        # np.savez appends .npz when missing — our temp name keeps it.
+        _fsync_file(npz + ".tmp.npz")
+        os.replace(npz + ".tmp.npz", npz)
+        with open(jsn + ".tmp", "w") as f:
+            json.dump({"leaf_names": names, "last_step": step}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(jsn + ".tmp", jsn)
+        _fsync_dir(self.dir)
 
     def _load_manifest(self) -> None:
         j = os.path.join(self.dir, "manifest.json")
@@ -163,8 +258,85 @@ class Checkpointer:
         if not (os.path.exists(j) and os.path.exists(z)):
             return
         meta = json.load(open(j))
-        self.leaf_names = meta["leaf_names"]
+        self.leaf_names = list(meta["leaf_names"])
+        self._leaf_idx = {p: i for i, p in enumerate(self.leaf_names)}
         data = np.load(z)
         for k, v in zip(data["keys"], data["vals"]):
             self.manifest.insert(k, v)
+            self.known_steps.add(int(k) >> _LEAF_BITS)
         self.manifest.drain()
+
+    # -------------------------------------------------------------- cleanup
+    def _step_leaves(self, step: int) -> list[str]:
+        """Leaf names the manifest records for ``step`` (range scan)."""
+        lo, hi = _key_of(step, 0), _key_of(step + 1, 0) - 1
+        rk, _ = self.manifest.range_query(lo, hi)
+        return [self.leaf_names[int(k) & ((1 << _LEAF_BITS) - 1)]
+                for k in rk]
+
+    def _cleanup_tmp(self) -> None:
+        """Resolve stale ``.tmp_step_*`` dirs left by a crash mid-save.
+
+        A temp dir the manifest fully proves (crash after manifest fsync,
+        before rename) is rolled *forward*; anything else is deleted.
+        """
+        for d in os.listdir(self.dir):
+            if not d.startswith(".tmp_step_"):
+                continue
+            tmp = os.path.join(self.dir, d)
+            suffix = d[len(".tmp_step_"):]
+            step = int(suffix) if suffix.isdigit() else None
+            final = (os.path.join(self.dir, f"step_{step}")
+                     if step is not None else None)
+            provable = (
+                step in self.known_steps and not os.path.exists(final)
+                and all(os.path.exists(os.path.join(tmp, n + ".npy"))
+                        for n in self._step_leaves(step)))
+            if provable:
+                os.rename(tmp, final)       # roll forward
+            else:
+                shutil.rmtree(tmp)          # unprovable half-write
+        _fsync_dir(self.dir)
+
+
+class EngineCheckpointer(Checkpointer):
+    """Engine-table snapshots keyed by commit LSN (DESIGN.md §9).
+
+    A snapshot is the engine's *logical* live table
+    (:meth:`~repro.core.engine_api.StorageEngine.dump_live`) as two array
+    leaves under step ``lsn``; recovery bulk-inserts it into a fresh engine
+    and replays the WAL tail (``repro.wal.recovery``).  Inherits the full
+    atomicity protocol, so a crash mid-checkpoint can never strand a
+    snapshot recovery would half-trust.
+    """
+
+    def save_snapshot(self, lsn: int, keys, vals, *,
+                      blocking: bool = True) -> None:
+        keys = np.ascontiguousarray(keys, np.uint64)
+        vals = np.ascontiguousarray(vals, np.int64)
+        if keys.shape != vals.shape:
+            raise CheckpointError("snapshot keys/vals must be parallel")
+        self.save(int(lsn), {"keys": keys, "vals": vals}, blocking=blocking)
+
+    def load_latest_snapshot(self):
+        """``(lsn, keys, vals)`` of the newest provable snapshot, or None."""
+        lsn = self.latest_step()
+        if lsn is None:
+            return None
+        d = os.path.join(self.dir, f"step_{lsn}")
+        out = []
+        for name in ("keys", "vals"):
+            idx = self._leaf_idx.get(name)
+            if idx is None or self.manifest.get(_key_of(lsn, idx)) is None:
+                raise CheckpointError(
+                    f"snapshot manifest missing {name!r} @ lsn {lsn}")
+            fp = os.path.join(d, name + ".npy")
+            if not os.path.exists(fp):
+                raise CheckpointError(f"snapshot leaf missing: {fp}")
+            out.append(np.load(fp))
+        keys, vals = out
+        if keys.shape != vals.shape:
+            raise CheckpointError(
+                f"snapshot @ lsn {lsn} has mismatched leaves: "
+                f"{keys.shape} vs {vals.shape}")
+        return int(lsn), keys, vals

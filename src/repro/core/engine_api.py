@@ -231,6 +231,12 @@ class EngineStats:
     maintain_unit_p50_s: float = 0.0
     maintain_unit_p99_s: float = 0.0
     maintain_unit_p100_s: float = 0.0
+    #: highest WAL commit LSN applied to this engine (0 = never ran under a
+    #: durable frontend).  Written by the durable ingest path via
+    #: :meth:`StorageEngine.note_applied`; the recovery invariant is that a
+    #: recovered engine's live table equals the acked prefix <= this LSN
+    #: (``repro.wal``, DESIGN.md §9).
+    applied_lsn: int = 0
 
 
 class StorageEngine(abc.ABC):
@@ -246,6 +252,7 @@ class StorageEngine(abc.ABC):
 
     def __init__(self):
         self._counts = {k: 0 for k in OpKind}
+        self.applied_lsn = 0        # highest durably-logged commit applied
 
     # ------------------------------------------------------------------ apply
     def apply(self, batch: OpBatch) -> OpResult:
@@ -291,6 +298,27 @@ class StorageEngine(abc.ABC):
         """Finish all deferred work (tests / shutdown)."""
         while self.maintain(64):
             pass
+
+    # -------------------------------------------------------------- durability
+    def note_applied(self, lsn: int) -> None:
+        """Record that every WAL commit up to ``lsn`` has been applied.
+
+        Called by the durable ingest frontend after each group commit's
+        ``apply`` and by WAL replay during recovery; surfaced as
+        ``EngineStats.applied_lsn``.  Monotone by construction.
+        """
+        if lsn > self.applied_lsn:
+            self.applied_lsn = int(lsn)
+
+    def dump_live(self) -> tuple:
+        """``(keys, vals)`` of every visible pair, key-sorted, cost-free.
+
+        The snapshot primitive of the durability subsystem: an engine-table
+        checkpoint is exactly this dump keyed by the commit LSN it reflects.
+        Like :meth:`count_live` it is an observer — it must charge no I/O
+        cost — and O(n).
+        """
+        raise UnsupportedOp(f"{self.name} does not support dump_live")
 
     # ------------------------------------------------------------------- stats
     @abc.abstractmethod
@@ -348,16 +376,19 @@ class CostModelEngine(StorageEngine):
         rk, rv = self.impl.range_query(lo, hi)
         return rk, rv, float(self.impl._last_query_time)
 
-    def count_live(self) -> int:
+    def dump_live(self) -> tuple:
         # an all-keyspace range scan is exact on every host tier; snapshot
         # and restore the cost counters so observation charges nothing.
         cm = self.cm
         saved = (cm.seeks, cm.bytes_read, cm.bytes_written, cm.pages)
         try:
-            rk, _ = self.impl.range_query(0, int(np.iinfo(KEY_DTYPE).max))
+            rk, rv = self.impl.range_query(0, int(np.iinfo(KEY_DTYPE).max))
         finally:
             cm.seeks, cm.bytes_read, cm.bytes_written, cm.pages = saved
-        return len(rk)
+        return (np.asarray(rk, KEY_DTYPE), np.asarray(rv, VAL_DTYPE))
+
+    def count_live(self) -> int:
+        return len(self.dump_live()[0])
 
     def height(self) -> int:
         return 1
@@ -387,7 +418,8 @@ class CostModelEngine(StorageEngine):
             n_queries=self._counts[OpKind.QUERY],
             n_ranges=self._counts[OpKind.RANGE],
             bloom_probes=int(probes), bloom_negative_skips=int(skips),
-            bloom_false_positives=int(fps))
+            bloom_false_positives=int(fps),
+            applied_lsn=self.applied_lsn)
 
 
 class RefNBTreeEngine(CostModelEngine):
@@ -627,7 +659,7 @@ class DeviceNBTreeEngine(StorageEngine):
             pass
 
     # ------------------------------------------------------------------- stats
-    def count_live(self) -> int:
+    def dump_live(self) -> tuple:
         run_keys = np.asarray(self.idx.run_keys)
         run_vals = np.asarray(self.idx.run_vals)
         seen: dict = {}
@@ -644,7 +676,14 @@ class DeviceNBTreeEngine(StorageEngine):
                 rec(c)
 
         rec(self.idx.root)
-        return sum(1 for v in seen.values() if v != self._tombstone32)
+        live = sorted((k, v) for k, v in seen.items()
+                      if v != self._tombstone32)
+        keys = np.asarray([k for k, _ in live], KEY_DTYPE)
+        vals = np.asarray([v for _, v in live], VAL_DTYPE)
+        return keys, vals
+
+    def count_live(self) -> int:
+        return len(self.dump_live()[0])
 
     def io_time_s(self) -> float:
         return self._wall_s
@@ -671,7 +710,8 @@ class DeviceNBTreeEngine(StorageEngine):
             maintain_wall_s=self._maintain_wall_s,
             maintain_unit_p50_s=float(np.percentile(mu, 50)) if mu.size else 0.0,
             maintain_unit_p99_s=float(np.percentile(mu, 99)) if mu.size else 0.0,
-            maintain_unit_p100_s=float(mu.max()) if mu.size else 0.0)
+            maintain_unit_p100_s=float(mu.max()) if mu.size else 0.0,
+            applied_lsn=self.applied_lsn)
 
 
 # =================================================================== registry

@@ -22,19 +22,48 @@ import numpy as np
 
 
 class HeartbeatMonitor:
+    """Per-step liveness with declare-once semantics.
+
+    A host silent for ``timeout_steps`` is declared dead exactly once (the
+    one ``advance`` call that crosses the threshold returns it; later calls
+    don't re-report, so the resize/recovery it triggers fires once).  A
+    beat arriving *after* the declaration is ignored — a host that was
+    declared dead has already been resized away, and silently readmitting
+    it would split the cluster's view; re-admission is the explicit
+    :meth:`revive` path (post-restart health check).
+    """
+
     def __init__(self, hosts: list[int], timeout_steps: int = 3):
         self.last_beat = {h: 0 for h in hosts}
         self.timeout = timeout_steps
         self.step = 0
+        self.dead: set[int] = set()
 
-    def beat(self, host: int, step: int) -> None:
+    def beat(self, host: int, step: int) -> bool:
+        """Record a heartbeat; returns False (ignored) for declared-dead
+        hosts — late beats do not resurrect, only :meth:`revive` does."""
+        if host in self.dead:
+            return False
         self.last_beat[host] = step
+        return True
 
     def advance(self, step: int) -> list[int]:
-        """Returns hosts declared dead at this step."""
+        """Returns hosts *newly* declared dead at this step."""
         self.step = step
-        return [h for h, s in self.last_beat.items()
-                if step - s >= self.timeout]
+        newly = [h for h, s in self.last_beat.items()
+                 if h not in self.dead and step - s >= self.timeout]
+        self.dead.update(newly)
+        return newly
+
+    def revive(self, host: int, step: int | None = None) -> None:
+        """Explicitly re-admit a declared-dead (or new) host.
+
+        The beat clock restarts at ``step`` (default: the monitor's current
+        step), so the host gets a full timeout window before it can be
+        re-declared.
+        """
+        self.dead.discard(host)
+        self.last_beat[host] = self.step if step is None else step
 
 
 class StragglerDetector:

@@ -11,12 +11,13 @@ operational form of the paper's worst-case insertion-delay claim.
 from .arrivals import (ARRIVALS, ArrivalProcess, ArrivalTrace,
                        DiurnalArrivals, MMPPArrivals, PoissonArrivals,
                        make_arrivals, make_trace)
-from .frontend import FrontendConfig, IngestFrontend, run_open_loop
+from .frontend import (DurabilityConfig, FrontendConfig, IngestFrontend,
+                       run_open_loop)
 from .slo import STALL_FACTOR, SLOTracker
 
 __all__ = [
     "ARRIVALS", "ArrivalProcess", "ArrivalTrace", "DiurnalArrivals",
     "MMPPArrivals", "PoissonArrivals", "make_arrivals", "make_trace",
-    "FrontendConfig", "IngestFrontend", "run_open_loop",
+    "DurabilityConfig", "FrontendConfig", "IngestFrontend", "run_open_loop",
     "STALL_FACTOR", "SLOTracker",
 ]

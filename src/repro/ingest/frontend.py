@@ -39,19 +39,37 @@ deterministic clock:
 End-to-end latency of op *i* = (commit time + its share of batch service)
 - arrival time = queueing + service; the SLO tracker reports exact
 p50/p99/p99.9/p100 per kind plus queue/shed/stall accounting.
+
+* **Durability** (optional; DESIGN.md §9): with a :class:`DurabilityConfig`
+  the frontend write-ahead-logs every group commit's INSERT/DELETE rows
+  (``repro.wal``) and **acks only after the record's fsync returns** — the
+  ack instant *is* durability.  The fsync-per-commit cost is charged on the
+  same clock as everything else: simulated seek + sequential-write seconds
+  on sim tiers (through a :class:`~repro.core.cost_model.CostModel` on the
+  engine's own device constants), measured wall seconds on the device tier.
+  Every ``checkpoint_every_commits`` commits the engine's live table is
+  snapshotted (``EngineCheckpointer``) at the current commit LSN and the
+  WAL is truncated past it, bounding recovery replay.  A crash at any
+  point (``repro.wal.faults``) recovers via ``repro.wal.recovery.recover``
+  to exactly the acked prefix.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 import numpy as np
 
+from repro.core.cost_model import PAIR_BYTES, SSD
 from repro.core.engine_api import OpBatch, OpKind, StorageEngine
+from repro.wal.faults import CrashPoint, FaultInjector, reach as _reach
 
 from .arrivals import ArrivalTrace
 from .slo import SLOTracker
 
 _KIND_NAMES = {int(k): k.name.lower() for k in OpKind}
+_WRITE_KINDS = (int(OpKind.INSERT), int(OpKind.DELETE))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,15 +92,131 @@ class FrontendConfig:
         assert self.virtual_op_service_s > 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Knobs of the WAL + checkpoint layer (DESIGN.md §9).
+
+    ``directory`` holds ``wal/`` (redo segments) and ``checkpoints/``
+    (LSN-keyed engine snapshots).  ``checkpoint_every_commits = 0``
+    disables periodic snapshots (the WAL alone still makes every acked
+    write recoverable; a nonempty preload is always snapshotted once
+    before the clock starts, since preload is never logged).
+    """
+
+    directory: str
+    segment_bytes: int = 1 << 20
+    checkpoint_every_commits: int = 0
+
+    def __post_init__(self):
+        assert self.segment_bytes >= 4096
+        assert self.checkpoint_every_commits >= 0
+
+
 class IngestFrontend:
     """Single-server open-loop serving simulation over one engine."""
 
-    def __init__(self, engine: StorageEngine, config: FrontendConfig | None = None):
+    def __init__(self, engine: StorageEngine, config: FrontendConfig | None = None,
+                 durability: DurabilityConfig | None = None,
+                 injector: FaultInjector | None = None):
         self.engine = engine
         self.config = config or FrontendConfig()
+        self.durability = durability
+        self._injector = injector
         # the engine self-reports its clock domain via stats(); adapters set
         # a class attribute, so probing one snapshot is cheap and universal.
         self.sim_clock = engine.stats().clock == "sim"
+        self._wal = None
+        self._ckpt = None
+        #: every acked group commit as ``(lsn, kinds, keys, vals)`` — the
+        #: ground truth the crash-matrix tests build their oracle from (an
+        #: op is in here iff its fsync returned, i.e. iff it was acked).
+        self.acked: list = []
+        self.last_acked_lsn = 0
+        if durability is not None:
+            from repro.checkpoint.checkpointer import EngineCheckpointer
+            from repro.wal import (CHECKPOINT_SUBDIR, WAL_SUBDIR,
+                                   WriteAheadLog)
+            self._wal = WriteAheadLog(
+                os.path.join(durability.directory, WAL_SUBDIR),
+                segment_bytes=durability.segment_bytes, injector=injector)
+            self._ckpt = EngineCheckpointer(
+                os.path.join(durability.directory, CHECKPOINT_SUBDIR),
+                injector=injector)
+            # fsync cost is charged on the engine's own device constants
+            # when it has any (sim tiers); the device tier measures wall
+            # time instead, so its device constant is never read.
+            cm = getattr(engine, "cm", None)
+            self._wal_device = cm.device if cm is not None else SSD
+            self._wal_service_s = 0.0
+            self._ckpt_service_s = 0.0
+            self._ckpt_lsn = 0
+            self._ckpts_taken = 0
+            self._last_snapshot_pairs = 0
+
+    # ------------------------------------------------------------- durability
+    def _wal_commit(self, batch: OpBatch) -> float:
+        """Durably log the commit's writes; returns charged seconds.
+
+        The ack instant for every write in the batch is the fsync return
+        inside ``append_commit`` — a crash before it means the ops were
+        never acked (and a torn record is truncated on recovery); a crash
+        after it means recovery must replay them.
+        """
+        wmask = np.isin(np.asarray(batch.kinds), _WRITE_KINDS)
+        if not wmask.any():
+            return 0.0              # read-only commit: nothing to make durable
+        t0 = time.perf_counter()
+        lsn, nbytes = self._wal.append_commit(
+            batch.kinds[wmask], batch.keys[wmask], batch.vals[wmask])
+        wall = time.perf_counter() - t0
+        if self.sim_clock:
+            dev = self._wal_device
+            sec = dev.seek_s + nbytes / dev.write_bw
+        else:
+            sec = wall
+        self._wal_service_s += sec
+        self.acked.append((lsn, batch.kinds[wmask].copy(),
+                           batch.keys[wmask].copy(), batch.vals[wmask].copy()))
+        self.last_acked_lsn = lsn
+        # the fsync returned, so the ops above ARE acked — this crash point
+        # therefore means "durable + acked, not yet applied": replay owes it.
+        _reach(self._injector, CrashPoint.AFTER_WAL_FSYNC)
+        return sec
+
+    def _checkpoint(self) -> float:
+        """Snapshot the engine's live table at the current commit LSN and
+        truncate the WAL past it; returns charged seconds."""
+        lsn = self._wal.last_lsn
+        t0 = time.perf_counter()
+        keys, vals = self.engine.dump_live()
+        self._ckpt.save_snapshot(lsn, keys, vals)
+        _reach(self._injector, CrashPoint.AFTER_CHECKPOINT)
+        self._wal.truncate_upto(lsn)
+        wall = time.perf_counter() - t0
+        self._ckpt_lsn = lsn
+        self._ckpts_taken += 1
+        self._last_snapshot_pairs = len(keys)
+        if self.sim_clock:
+            dev = self._wal_device
+            sec = dev.seek_s + len(keys) * PAIR_BYTES / dev.write_bw
+        else:
+            sec = wall
+        self._ckpt_service_s += sec
+        return sec
+
+    def _maintain(self, budget: int) -> int:
+        """``engine.maintain`` with the mid-cascade crash point threaded in
+        (unit-at-a-time only when an injector is armed — the production
+        path stays one call)."""
+        if self._injector is None or budget <= 0:
+            return self.engine.maintain(budget)
+        debt = self.engine.maintain(0)
+        for _ in range(int(budget)):
+            if not debt:
+                break
+            debt = self.engine.maintain(1)
+            _reach(self._injector, CrashPoint.MID_CASCADE)
+        return debt
 
     # ----------------------------------------------------------------- running
     def run(self, trace: ArrivalTrace, *, drain: bool = True) -> dict:
@@ -95,12 +229,19 @@ class IngestFrontend:
         if len(trace.preload):
             eng.apply(trace.preload)
             eng.drain()
+            if self._ckpt is not None:
+                # preload is setup, not offered load — it is never WAL-logged,
+                # so durability requires snapshotting it before the clock
+                # starts (uncharged, like the load phase itself).
+                self._checkpoint()
+                self._ckpt_service_s = 0.0
 
         kinds = np.asarray(trace.ops.kinds)
         t_arr = np.asarray(trace.t_arrive, np.float64)
         n = len(kinds)
         queue: list[int] = []       # FIFO of admitted op indices
         self._i = 0                 # next arrival not yet admitted/shed
+        self._n_commits = 0         # group commits served (checkpoint cadence)
         t_free = 0.0                # server becomes available at this time
 
         def admit_until(t: float) -> None:
@@ -145,26 +286,45 @@ class IngestFrontend:
             batch = OpBatch(kinds[idx], trace.ops.keys[idx],
                             trace.ops.vals[idx], trace.ops.his[idx])
 
+            # ---- durability: WAL append + fsync BEFORE apply --------------
+            # (write-ahead rule; the fsync return is the ack instant, and
+            # its cost is part of the commit's service time on this clock.)
+            wal_s = 0.0
+            if self._wal is not None:
+                wal_s = self._wal_commit(batch)
+
             # ---- service (engine clock -> simulated clock) ----------------
             # apply cost is charged through per-op latencies (the engine's
             # foreground share); maintenance through the charged-I/O delta.
             res = eng.apply(batch)
+            if self._wal is not None:
+                eng.note_applied(self.last_acked_lsn)
+                _reach(self._injector, CrashPoint.AFTER_APPLY)
             if self.sim_clock:
                 op_service = np.asarray(res.latency_s, np.float64)
             else:
                 op_service = np.full(len(idx), cfg.virtual_op_service_s)
-            service_s = float(op_service.sum())
+            service_s = wal_s + float(op_service.sum())
 
             # ---- interleaved maintenance + debt snapshot ------------------
             io1 = eng.io_time_s()
-            debt = eng.maintain(cfg.maintain_budget)
+            debt = self._maintain(cfg.maintain_budget)
             io2 = eng.io_time_s()
             if self.sim_clock:
                 maintain_s = io2 - io1
             else:
                 maintain_s = cfg.virtual_op_service_s * cfg.maintain_budget
 
-            done = t_commit + np.cumsum(op_service)
+            # ---- periodic checkpoint: snapshot @ LSN, truncate WAL --------
+            self._n_commits += 1
+            if (self._ckpt is not None
+                    and self.durability.checkpoint_every_commits
+                    and self._n_commits
+                    % self.durability.checkpoint_every_commits == 0
+                    and self._wal.last_lsn > self._ckpt_lsn):
+                maintain_s += self._checkpoint()
+
+            done = t_commit + wal_s + np.cumsum(op_service)
             tracker.record_commit(
                 t_commit=t_commit,
                 kinds=[_KIND_NAMES[int(k)] for k in kinds[idx]],
@@ -185,18 +345,34 @@ class IngestFrontend:
         report["service_model"] = "charged" if self.sim_clock else "virtual"
         report["pending_debt_at_end"] = int(debt_final)
         report["config"] = dataclasses.asdict(self.config)
+        if self._wal is not None:
+            self._wal.close()
+            report["durability"] = {
+                "config": dataclasses.asdict(self.durability),
+                "wal": self._wal.stats()
+                | {"service_s_total": self._wal_service_s},
+                "checkpoints": {
+                    "taken": self._ckpts_taken,
+                    "last_lsn": self._ckpt_lsn,
+                    "last_snapshot_pairs": self._last_snapshot_pairs,
+                    "service_s_total": self._ckpt_service_s,
+                },
+                "acked_commits": len(self.acked),
+                "last_acked_lsn": self.last_acked_lsn,
+            }
         return report
 
 
 def run_open_loop(engine: StorageEngine, trace: ArrivalTrace, *,
-                  config: FrontendConfig | None = None) -> dict:
+                  config: FrontendConfig | None = None,
+                  durability: DurabilityConfig | None = None) -> dict:
     """One-call harness: serve ``trace`` on ``engine``, full JSON report.
 
     The returned dict mirrors the closed-loop driver report shape (engine
     name, arrival description, final ``stats()`` snapshot) with the
     open-loop SLO section under ``"open_loop"``.
     """
-    fe = IngestFrontend(engine, config)
+    fe = IngestFrontend(engine, config, durability=durability)
     ol = fe.run(trace)
     stats = engine.stats()
     return {

@@ -272,6 +272,16 @@ class ShardedEngine(StorageEngine):
     def count_live(self) -> int:
         return sum(e.count_live() for e in self._engines)
 
+    def dump_live(self) -> tuple:
+        """Key-sorted union of the shard dumps (shards are disjoint)."""
+        dumps = [e.dump_live() for e in self._engines]
+        if not dumps:
+            return (np.zeros(0, KEY_DTYPE), np.zeros(0, VAL_DTYPE))
+        rk = np.concatenate([d[0] for d in dumps])
+        rv = np.concatenate([d[1] for d in dumps])
+        order = np.argsort(rk, kind="stable")
+        return rk[order], rv[order]
+
     def stats(self) -> EngineStats:
         per = [e.stats() for e in self._engines]
         debts = [e.maintain(0) for e in self._engines]
@@ -313,4 +323,5 @@ class ShardedEngine(StorageEngine):
             maintain_unit_p99_s=max((s.maintain_unit_p99_s for s in per),
                                     default=0.0),
             maintain_unit_p100_s=max((s.maintain_unit_p100_s for s in per),
-                                     default=0.0))
+                                     default=0.0),
+            applied_lsn=self.applied_lsn)

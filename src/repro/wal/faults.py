@@ -1,0 +1,103 @@
+"""Crash-point fault injection for the durability subsystem (DESIGN.md §9).
+
+A :class:`FaultInjector` is armed with one :class:`CrashPoint` and an
+occurrence count; durability-aware code calls :meth:`FaultInjector.reach`
+at every protocol point, and the injector raises :class:`SimulatedCrash`
+when its armed point is reached for the N-th time.  The exception
+propagates out of the serving loop exactly like a process kill would end
+it: whatever the WAL/checkpoint directory holds at that instant is what
+recovery gets.
+
+The one place a raised exception is *weaker* than a kill — bytes written
+but not yet fsynced may transparently survive in the page cache — is
+handled by the ``on_crash`` hook: the WAL passes a callback that tears the
+unsynced tail (truncates the segment mid-record) before the crash fires,
+simulating the adversarial outcome a real power loss can produce.  The
+recovery invariant under test is therefore the strict one: *acked implies
+durable* (fsync returned) and *unacked implies absent after recovery*.
+
+Crash points (the full matrix ``tests/test_durability.py`` kills at):
+
+================================  =============================================
+point                             state at the kill
+================================  =============================================
+``BEFORE_WAL_APPEND``             commit formed, nothing logged — ops unacked,
+                                  legitimately lost
+``AFTER_WAL_APPEND``              record written, **not fsynced** — tail torn;
+                                  recovery must truncate it, never resurrect
+``AFTER_WAL_FSYNC``               record durable ⇒ ops **acked**, but not yet
+                                  applied to the engine — replay must apply
+``AFTER_APPLY``                   acked + applied, before maintenance
+``MID_CASCADE``                   between emptying-cascade work units inside
+                                  ``maintain`` — index mid-restructure
+``MID_CHECKPOINT``                snapshot leaves written, manifest not yet —
+                                  the half-checkpoint must be ignored
+``BEFORE_CHECKPOINT_RENAME``      manifest fsynced, step dir still ``.tmp`` —
+                                  recovery rolls the provable step forward
+``AFTER_CHECKPOINT``              checkpoint complete, WAL tail not yet
+                                  truncated — replay must skip ≤-snapshot LSNs
+================================  =============================================
+"""
+from __future__ import annotations
+
+import enum
+
+
+class CrashPoint(enum.Enum):
+    BEFORE_WAL_APPEND = "before-wal-append"
+    AFTER_WAL_APPEND = "after-wal-append"          # written, not fsynced
+    AFTER_WAL_FSYNC = "after-wal-fsync"            # durable == acked
+    AFTER_APPLY = "after-apply"
+    MID_CASCADE = "mid-cascade"
+    MID_CHECKPOINT = "mid-checkpoint"              # leaves written, no manifest
+    BEFORE_CHECKPOINT_RENAME = "before-checkpoint-rename"
+    AFTER_CHECKPOINT = "after-checkpoint"          # before WAL truncation
+
+
+class SimulatedCrash(RuntimeError):
+    """The injected kill: propagates out of the serving loop like SIGKILL."""
+
+    def __init__(self, point: CrashPoint, occurrence: int):
+        super().__init__(f"simulated crash at {point.value} "
+                         f"(occurrence {occurrence})")
+        self.point = point
+        self.occurrence = occurrence
+
+
+class FaultInjector:
+    """Raise :class:`SimulatedCrash` the ``at_occurrence``-th time
+    ``point`` is reached.
+
+    One injector arms one point; ``fired`` records whether the crash
+    actually happened (a test that armed a point the run never reaches can
+    tell the difference between "survived" and "never exercised").
+    """
+
+    def __init__(self, point: CrashPoint, at_occurrence: int = 1):
+        assert at_occurrence >= 1
+        self.point = point
+        self.at_occurrence = int(at_occurrence)
+        self.seen = 0
+        self.fired = False
+
+    def reach(self, point: CrashPoint, on_crash=None) -> None:
+        """Announce that ``point`` was reached.
+
+        ``on_crash`` (optional callable) runs just before the crash is
+        raised — the hook the WAL uses to tear its unsynced tail.
+        """
+        if point is not self.point:
+            return
+        self.seen += 1
+        if self.seen == self.at_occurrence:
+            self.fired = True
+            if on_crash is not None:
+                on_crash()
+            raise SimulatedCrash(point, self.seen)
+
+
+def reach(injector: FaultInjector | None, point: CrashPoint,
+          on_crash=None) -> None:
+    """``injector.reach`` that tolerates ``injector=None`` (production)."""
+    if injector is not None:
+        injector.reach(point, on_crash)

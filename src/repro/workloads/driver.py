@@ -42,7 +42,10 @@ from .generator import MIXES, Workload, make_workload
 #: v3: EngineStats bloom_* counters; open-loop (``--arrival``) reports.
 #: v4: EngineStats maintain-unit wall-clock fields (units, total,
 #: p50/p99/p100 per unit) — real device-tier maintenance service cost.
-SCHEMA_VERSION = 4
+#: v5: EngineStats.applied_lsn; open-loop reports gain a ``durability``
+#: section (WAL/checkpoint counters + charged fsync service) when the
+#: frontend runs with a DurabilityConfig (DESIGN.md §9).
+SCHEMA_VERSION = 5
 
 
 class LatencyHistogram:

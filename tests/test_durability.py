@@ -1,0 +1,475 @@
+"""Durability subsystem tests (DESIGN.md §9).
+
+Covers the WAL (record round trips, segment rotation, garbage-tail
+truncation, checkpoint GC, LSN continuity across reopen), the full crash
+matrix through the durable ingest frontend (kill at every
+:class:`~repro.wal.faults.CrashPoint`, recover, differential-check against
+a sorted-dict oracle of exactly the acked prefix), the checkpointer
+atomicity protocol (roll-forward vs delete of ``.tmp_step_*``, async-save
+reader safety, real exceptions on corrupt restores, bf16 round trip), the
+``dump_live`` snapshot primitive across engine tiers, and the
+HeartbeatMonitor declare-once/revive fix.
+
+The two invariants every crash-matrix case asserts:
+
+* **zero lost acked writes** — every op whose group-commit fsync returned
+  before the kill is present in the recovered engine;
+* **zero resurrected unacked writes** — no op whose fsync did *not*
+  return is present (torn WAL tails are truncated on open).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.engine_api import OpBatch, OpKind, make_engine
+from repro.ingest import (DurabilityConfig, FrontendConfig, IngestFrontend,
+                          PoissonArrivals, make_trace, run_open_loop)
+from repro.wal import (CrashPoint, FaultInjector, SimulatedCrash,
+                       WriteAheadLog, recover)
+from repro.workloads import make_workload
+
+KEYS = np.uint64
+VALS = np.int64
+
+
+def _commit(i, n=8):
+    """Deterministic synthetic commit #i: n inserts with key = i*100 + j."""
+    keys = np.arange(i * 100, i * 100 + n, dtype=KEYS)
+    kinds = np.full(n, int(OpKind.INSERT), np.int8)
+    return kinds, keys, keys.astype(VALS)
+
+
+# ------------------------------------------------------------------------ wal
+def test_wal_roundtrip_rotation_and_reopen(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=4096)
+    for i in range(1, 31):
+        lsn, nbytes = wal.append_commit(*_commit(i))
+        assert lsn == i and nbytes > 0
+    assert wal.last_lsn == 30
+    assert wal.n_segments > 1, "4 KiB segments must have rotated"
+    recs = list(wal.replay())
+    assert [r.lsn for r in recs] == list(range(1, 31))
+    k, kk, vv = _commit(7)
+    assert np.array_equal(recs[6].keys, kk)
+    assert np.array_equal(recs[6].vals, vv)
+    assert np.array_equal(recs[6].kinds, k)
+    # replay after an LSN yields exactly the strict tail
+    assert [r.lsn for r in wal.replay(after_lsn=25)] == [26, 27, 28, 29, 30]
+    wal.close()
+
+    # reopen: LSN chain continues where it left off
+    wal2 = WriteAheadLog(str(tmp_path), segment_bytes=4096)
+    assert wal2.last_lsn == 30
+    assert wal2.truncated_tail_bytes == 0
+    lsn, _ = wal2.append_commit(*_commit(31))
+    assert lsn == 31
+    wal2.close()
+
+
+def test_wal_garbage_tail_truncated_on_open(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=1 << 16)
+    for i in range(1, 6):
+        wal.append_commit(*_commit(i))
+    wal.close()
+    seg = sorted(os.listdir(tmp_path))[-1]
+    with open(tmp_path / seg, "ab") as f:     # a torn, never-fsynced commit
+        f.write(b"\x57\x41\x4c\x31 torn garbage bytes")
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.last_lsn == 5, "valid prefix must survive"
+    assert wal2.truncated_tail_bytes > 0
+    assert [r.lsn for r in wal2.replay()] == [1, 2, 3, 4, 5]
+    # the file itself was physically truncated, not just skipped
+    wal2.close()
+    assert WriteAheadLog(str(tmp_path)).truncated_tail_bytes == 0
+
+
+def test_wal_corrupt_record_drops_suffix(tmp_path):
+    """A flipped byte mid-log invalidates that record AND everything after
+    (the LSN chain can't be trusted past a corrupt link)."""
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=1 << 16)
+    offsets = [0]
+    for i in range(1, 6):
+        _, nbytes = wal.append_commit(*_commit(i))
+        offsets.append(offsets[-1] + nbytes)
+    wal.close()
+    seg = sorted(os.listdir(tmp_path))[0]
+    with open(tmp_path / seg, "r+b") as f:    # corrupt record 3's payload
+        f.seek(offsets[2] + 20)
+        b = f.read(1)
+        f.seek(offsets[2] + 20)
+        f.write(bytes([b[0] ^ 0xFF]))
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.last_lsn == 2
+    assert [r.lsn for r in wal2.replay()] == [1, 2]
+    wal2.close()
+
+
+def test_wal_truncate_upto_keeps_newest_segment(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=4096)
+    for i in range(1, 91):
+        wal.append_commit(*_commit(i))
+    nseg = wal.n_segments
+    assert nseg > 2
+    removed = wal.truncate_upto(wal.last_lsn)
+    assert removed == nseg - 1, "everything but the open segment is covered"
+    assert wal.n_segments == 1
+    # the kept segment still carries the LSN counter across a reopen
+    wal.close()
+    wal2 = WriteAheadLog(str(tmp_path), segment_bytes=4096)
+    assert wal2.last_lsn == 90
+    wal2.close()
+
+
+def test_wal_torn_append_via_injector(tmp_path):
+    inj = FaultInjector(CrashPoint.AFTER_WAL_APPEND, at_occurrence=3)
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=1 << 16, injector=inj)
+    wal.append_commit(*_commit(1))
+    wal.append_commit(*_commit(2))
+    with pytest.raises(SimulatedCrash):
+        wal.append_commit(*_commit(3))        # written, torn, never fsynced
+    assert inj.fired
+    wal2 = WriteAheadLog(str(tmp_path))
+    assert wal2.last_lsn == 2, "the torn record must not resurrect"
+    assert wal2.truncated_tail_bytes > 0
+    wal2.close()
+
+
+# --------------------------------------------------------------- crash matrix
+def _durable_trace(n_ops=1200, seed=5):
+    wl = make_workload("delete-churn", key_space=1 << 14, n_ops=n_ops,
+                       preload=256, batch_size=128, seed=seed)
+    return make_trace(wl, PoissonArrivals(50_000.0))
+
+
+def _durable_frontend(directory, injector=None, ckpt_every=4):
+    eng = make_engine("nbtree", f=3, sigma=64)
+    fe = IngestFrontend(
+        eng, FrontendConfig(max_queue=2048, commit_ops=32, linger_s=5e-4),
+        durability=DurabilityConfig(str(directory), segment_bytes=4096,
+                                    checkpoint_every_commits=ckpt_every),
+        injector=injector)
+    return eng, fe
+
+
+def _oracle(trace, acked):
+    """Sorted-dict ground truth: preload then every *acked* commit in LSN
+    order (an op is acked iff its commit's fsync returned)."""
+    d = {}
+    for k, v in zip(trace.preload.keys.tolist(), trace.preload.vals.tolist()):
+        d[int(k)] = int(v)
+    for _lsn, kinds, keys, vals in acked:
+        for kk, k, v in zip(kinds.tolist(), keys.tolist(), vals.tolist()):
+            if kk == int(OpKind.INSERT):
+                d[int(k)] = int(v)
+            else:
+                d.pop(int(k), None)
+    return sorted(d.items())
+
+
+def _assert_recovered_equals_oracle(directory, trace, fe):
+    rr = recover(str(directory),
+                 lambda: make_engine("nbtree", f=3, sigma=64))
+    want = _oracle(trace, fe.acked)
+    rk, rv = rr.engine.dump_live()
+    assert rk.tolist() == [k for k, _ in want], "lost or resurrected keys"
+    assert rv.tolist() == [v for _, v in want], "stale values after recovery"
+    assert rr.last_lsn == fe.last_acked_lsn
+    assert rr.engine.stats().applied_lsn == fe.last_acked_lsn
+    return rr
+
+
+# occurrence picked so the kill lands mid-run: WAL points fire per commit
+# (4th commit => 3 acked survivors); checkpoint points fire per snapshot
+# (occurrence 1 is the preload snapshot, 2 the first periodic one).
+_MATRIX = [
+    (CrashPoint.BEFORE_WAL_APPEND, 4),
+    (CrashPoint.AFTER_WAL_APPEND, 4),      # torn tail: durable-prefix only
+    (CrashPoint.AFTER_WAL_FSYNC, 4),       # acked but never applied
+    (CrashPoint.AFTER_APPLY, 4),
+    (CrashPoint.MID_CASCADE, 3),           # index mid-restructure
+    (CrashPoint.MID_CHECKPOINT, 2),        # leaves written, no manifest
+    (CrashPoint.BEFORE_CHECKPOINT_RENAME, 2),
+    (CrashPoint.AFTER_CHECKPOINT, 2),      # snapshot done, WAL not truncated
+]
+
+
+@pytest.mark.parametrize("point,occurrence", _MATRIX,
+                         ids=[p.value for p, _ in _MATRIX])
+def test_crash_matrix_recovers_exact_acked_prefix(tmp_path, point, occurrence):
+    trace = _durable_trace()
+    inj = FaultInjector(point, at_occurrence=occurrence)
+    _, fe = _durable_frontend(tmp_path, injector=inj)
+    with pytest.raises(SimulatedCrash) as exc:
+        fe.run(trace)
+    assert inj.fired, f"{point.value} was never exercised"
+    assert exc.value.point is point
+    _assert_recovered_equals_oracle(tmp_path, trace, fe)
+
+
+def test_crash_late_in_run_replays_only_the_tail(tmp_path):
+    """A late kill recovers from a periodic snapshot + short WAL tail, not
+    from LSN 1 — the checkpoint actually bounds replay."""
+    trace = _durable_trace(n_ops=1600)
+    inj = FaultInjector(CrashPoint.AFTER_APPLY, at_occurrence=30)
+    _, fe = _durable_frontend(tmp_path, injector=inj, ckpt_every=8)
+    with pytest.raises(SimulatedCrash):
+        fe.run(trace)
+    assert inj.fired
+    rr = _assert_recovered_equals_oracle(tmp_path, trace, fe)
+    assert rr.snapshot_lsn > 0
+    assert rr.replayed_commits < len(fe.acked)
+    assert rr.snapshot_lsn + rr.replayed_commits == rr.last_lsn
+
+
+def test_double_crash_recovery_is_stable(tmp_path):
+    """recover() is read-only apart from garbage truncation: running it
+    twice (crash during recovery, then again) yields the same state."""
+    trace = _durable_trace()
+    inj = FaultInjector(CrashPoint.AFTER_WAL_APPEND, at_occurrence=6)
+    _, fe = _durable_frontend(tmp_path, injector=inj)
+    with pytest.raises(SimulatedCrash):
+        fe.run(trace)
+    r1 = _assert_recovered_equals_oracle(tmp_path, trace, fe)
+    r2 = _assert_recovered_equals_oracle(tmp_path, trace, fe)
+    assert r2.truncated_tail_bytes == 0, "first open already truncated"
+    assert r1.last_lsn == r2.last_lsn
+
+
+# --------------------------------------------------------- durable, no crash
+def test_durable_run_report_and_recovery(tmp_path):
+    trace = _durable_trace()
+    eng, fe = _durable_frontend(tmp_path, ckpt_every=8)
+    rep = fe.run(trace)
+    dur = rep["durability"]
+    assert dur["acked_commits"] == len(fe.acked) > 0
+    assert dur["last_acked_lsn"] == fe.last_acked_lsn == dur["wal"]["last_lsn"]
+    assert dur["wal"]["syncs"] == dur["wal"]["appends"] == dur["acked_commits"]
+    assert dur["wal"]["service_s_total"] > 0.0
+    assert dur["checkpoints"]["taken"] > 0
+    # recovery from the surviving directory == the live engine, bit for bit
+    rr = _assert_recovered_equals_oracle(tmp_path, trace, fe)
+    ek, ev = eng.dump_live()
+    rk, rv = rr.engine.dump_live()
+    assert np.array_equal(ek, rk) and np.array_equal(ev, rv)
+
+
+def test_wal_overhead_and_state_parity_with_wal_off(tmp_path):
+    """Durability never changes answers, only cost: same trace with WAL
+    on/off lands the same live table, and WAL-on charges strictly more
+    service time (the fsync is on the clock)."""
+    on_eng, fe = _durable_frontend(tmp_path, ckpt_every=0)
+    rep_on = fe.run(_durable_trace(seed=9))
+    off_eng = make_engine("nbtree", f=3, sigma=64)
+    rep_off = IngestFrontend(
+        off_eng, FrontendConfig(max_queue=2048, commit_ops=32,
+                                linger_s=5e-4)).run(_durable_trace(seed=9))
+    assert rep_on["n_shed"] == rep_off["n_shed"] == 0
+    ok, ov = on_eng.dump_live()
+    fk, fv = off_eng.dump_live()
+    assert np.array_equal(ok, fk) and np.array_equal(ov, fv)
+    assert rep_on["server"]["service_s"] > rep_off["server"]["service_s"]
+
+
+def test_durable_report_deterministic(tmp_path):
+    """Sim-tier durable runs are pure functions of (trace, config): two
+    runs differ only in the directory path they were given."""
+    import json
+
+    def one(sub):
+        eng = make_engine("nbtree", f=3, sigma=64)
+        rep = run_open_loop(
+            eng, _durable_trace(seed=3),
+            config=FrontendConfig(max_queue=2048, commit_ops=32),
+            durability=DurabilityConfig(str(tmp_path / sub),
+                                        checkpoint_every_commits=8))
+        rep["open_loop"]["durability"]["config"]["directory"] = "<dir>"
+        return json.dumps(rep, sort_keys=True)
+
+    assert one("a") == one("b")
+
+
+def test_wal_only_recovery_without_checkpoints(tmp_path):
+    """checkpoint_every_commits=0 still recovers every acked write (preload
+    is snapshotted once; the WAL tail does the rest)."""
+    trace = _durable_trace()
+    inj = FaultInjector(CrashPoint.AFTER_WAL_FSYNC, at_occurrence=12)
+    _, fe = _durable_frontend(tmp_path, injector=inj, ckpt_every=0)
+    with pytest.raises(SimulatedCrash):
+        fe.run(trace)
+    rr = _assert_recovered_equals_oracle(tmp_path, trace, fe)
+    assert rr.replayed_commits == len(fe.acked), "no periodic snapshot: " \
+        "every acked commit must come back via replay"
+
+
+# ------------------------------------------------------------------ dump_live
+@pytest.mark.parametrize("name,kw", [
+    ("nbtree", dict(f=3, sigma=128)),
+    ("lsm", dict(mem_pairs=128)),
+    ("btree", dict()),
+    ("sharded:nbtree", dict(shards=2, f=3, sigma=128)),
+    ("jax-nbtree", dict(f=4, sigma=64, max_nodes=64)),
+])
+def test_dump_live_conformance(name, kw):
+    """dump_live is the snapshot primitive: key-sorted live table with
+    deletes applied, identical across tiers, and cost-free."""
+    rng = np.random.default_rng(1)
+    keys = rng.choice(np.arange(1, 4096, dtype=KEYS), size=256, replace=False)
+    eng = make_engine(name, **kw)
+    eng.apply(OpBatch.inserts(keys, keys.astype(VALS)))
+    eng.apply(OpBatch.deletes(keys[:64]))
+    eng.drain()
+    io_before = eng.io_time_s()
+    dk, dv = eng.dump_live()
+    assert eng.io_time_s() == io_before, "snapshot must not charge sim I/O"
+    want = np.sort(keys[64:])
+    assert np.array_equal(dk, want)
+    assert np.array_equal(dv, want.astype(VALS))
+    assert dk.dtype == KEYS and dv.dtype == VALS
+    assert len(dk) == eng.count_live()
+
+
+def test_note_applied_monotone():
+    eng = make_engine("nbtree", f=3, sigma=128)
+    assert eng.stats().applied_lsn == 0
+    eng.note_applied(7)
+    eng.note_applied(3)           # stale LSNs never move the watermark back
+    assert eng.stats().applied_lsn == 7
+
+
+# --------------------------------------------------------------- checkpointer
+def _tree(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    return {"layer": {"w": rng.standard_normal((8, n)).astype(np.float32),
+                      "b": rng.standard_normal((n,)).astype(np.float32)}}
+
+
+def test_checkpointer_crash_before_manifest_is_invisible(tmp_path):
+    """MID_CHECKPOINT kill: leaves on disk, manifest not yet written — the
+    half-checkpoint must be deleted on reopen, never restored."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))
+    inj = FaultInjector(CrashPoint.MID_CHECKPOINT, at_occurrence=1)
+    ck2 = Checkpointer(str(tmp_path), injector=inj)
+    with pytest.raises(SimulatedCrash):
+        ck2.save(2, _tree(2))
+    assert os.path.isdir(tmp_path / ".tmp_step_2")
+    ck3 = Checkpointer(str(tmp_path))
+    assert not os.path.isdir(tmp_path / ".tmp_step_2"), "unprovable tmp kept"
+    assert ck3.latest_step() == 1
+    got = ck3.restore(1, _tree(1))
+    np.testing.assert_array_equal(np.asarray(got["layer"]["w"]),
+                                  _tree(1)["layer"]["w"])
+
+
+def test_checkpointer_crash_after_manifest_rolls_forward(tmp_path):
+    """BEFORE_CHECKPOINT_RENAME kill: manifest fsynced, dir still .tmp —
+    reopen must finish the rename and the step must restore."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    inj = FaultInjector(CrashPoint.BEFORE_CHECKPOINT_RENAME, at_occurrence=1)
+    ck = Checkpointer(str(tmp_path), injector=inj)
+    with pytest.raises(SimulatedCrash):
+        ck.save(3, _tree(3))
+    assert os.path.isdir(tmp_path / ".tmp_step_3")
+    assert not os.path.isdir(tmp_path / "step_3")
+    ck2 = Checkpointer(str(tmp_path))
+    assert os.path.isdir(tmp_path / "step_3"), "provable tmp must roll forward"
+    assert ck2.latest_step() == 3
+    got = ck2.restore(3, _tree(3))
+    np.testing.assert_array_equal(np.asarray(got["layer"]["b"]),
+                                  _tree(3)["layer"]["b"])
+
+
+def test_checkpointer_async_save_readers_wait(tmp_path):
+    """blocking=False: latest_step/restore right after save must see the
+    finished checkpoint (readers join the writer thread), and a second
+    save must not race the first."""
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), blocking=False)
+    assert ck.latest_step() == 1            # waits for the daemon writer
+    ck.save(2, _tree(2), blocking=False)
+    got = ck.restore(2, _tree(2))           # waits again
+    np.testing.assert_array_equal(np.asarray(got["layer"]["w"]),
+                                  _tree(2)["layer"]["w"])
+    # a fresh process sees both steps via the manifest
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.known_steps >= {1, 2}
+
+
+def test_checkpointer_restore_raises_real_exceptions(tmp_path):
+    """Validation failures are CheckpointError even under ``python -O``
+    (bare asserts would vanish)."""
+    from repro.checkpoint.checkpointer import CheckpointError, Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))
+    with pytest.raises(CheckpointError, match="manifest missing"):
+        ck.restore(99, _tree(1))
+    bad_shape = {"layer": {"w": np.zeros((8, 65), np.float32),
+                           "b": np.zeros((64,), np.float32)}}
+    with pytest.raises(CheckpointError, match="shape mismatch"):
+        ck.restore(1, bad_shape)
+    os.unlink(tmp_path / "step_1" / "layer.b.npy")
+    with pytest.raises(CheckpointError, match="leaf file missing"):
+        ck.restore(1, _tree(1))
+
+
+def test_checkpointer_bf16_round_trip(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint.checkpointer import Checkpointer
+
+    tree = {"p": jnp.arange(32, dtype=jnp.bfloat16) / 7}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, tree)
+    got = ck.restore(4, tree)
+    assert got["p"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["p"], np.float32),
+                                  np.asarray(tree["p"], np.float32))
+
+
+def test_engine_checkpointer_snapshot_round_trip(tmp_path):
+    from repro.checkpoint.checkpointer import (CheckpointError,
+                                               EngineCheckpointer)
+
+    ck = EngineCheckpointer(str(tmp_path))
+    assert ck.load_latest_snapshot() is None
+    keys = np.arange(10, 50, dtype=KEYS)
+    ck.save_snapshot(17, keys, keys.astype(VALS))
+    lsn, rk, rv = ck.load_latest_snapshot()
+    assert lsn == 17
+    assert np.array_equal(rk, keys) and np.array_equal(rv, keys.astype(VALS))
+    with pytest.raises(CheckpointError, match="parallel"):
+        ck.save_snapshot(18, keys, keys[:-1].astype(VALS))
+
+
+# ---------------------------------------------------------- heartbeat monitor
+def test_heartbeat_declare_once_and_revive():
+    from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+    mon = HeartbeatMonitor([0, 1, 2], timeout_steps=3)
+    for s in range(1, 4):
+        mon.beat(0, s)
+        mon.beat(1, s)            # host 2 never beats
+    assert mon.advance(4) == [2]
+    assert mon.advance(5) == [], "a dead host is declared exactly once"
+    assert mon.beat(2, 5) is False, "late beats must not resurrect"
+    mon.beat(0, 7)
+    mon.beat(1, 7)
+    assert mon.advance(8) == [], "ignored beat didn't reset the clock either"
+    mon.revive(2)
+    assert 2 not in mon.dead
+    assert mon.beat(2, 9) is True
+    mon.beat(0, 10)
+    mon.beat(1, 10)
+    assert mon.advance(10) == [], "revived host has a fresh timeout window"
+    # a revived host that goes silent again is re-declared (once)
+    mon.beat(0, 12)
+    mon.beat(1, 12)
+    assert mon.advance(13) == [2]
+    assert mon.advance(14) == []

@@ -320,6 +320,23 @@ class StorageEngine(abc.ABC):
         """
         raise UnsupportedOp(f"{self.name} does not support dump_live")
 
+    def dump_live_range(self, lo: int, hi: int) -> tuple:
+        """``(keys, vals)`` of visible pairs with ``lo <= key <= hi``.
+
+        Cost-free observer like :meth:`dump_live`.  A tenant namespace
+        (``repro.tenancy``) is a contiguous encoded key interval, so this
+        is the per-namespace snapshot/stats primitive; sharded ensembles
+        override it to consult only intersecting shards.
+        """
+        keys, vals = self.dump_live()
+        a = int(np.searchsorted(keys, np.asarray(lo, KEY_DTYPE), "left"))
+        b = int(np.searchsorted(keys, np.asarray(hi, KEY_DTYPE), "right"))
+        return keys[a:b], vals[a:b]
+
+    def count_live_range(self, lo: int, hi: int) -> int:
+        """Exact number of visible keys in ``[lo, hi]`` (cost-free)."""
+        return len(self.dump_live_range(lo, hi)[0])
+
     # ------------------------------------------------------------------- stats
     @abc.abstractmethod
     def io_time_s(self) -> float:

@@ -10,7 +10,7 @@ operational form of the paper's worst-case insertion-delay claim.
 """
 from .arrivals import (ARRIVALS, ArrivalProcess, ArrivalTrace,
                        DiurnalArrivals, MMPPArrivals, PoissonArrivals,
-                       make_arrivals, make_trace)
+                       make_arrivals, make_trace, multiplex)
 from .frontend import (DurabilityConfig, FrontendConfig, IngestFrontend,
                        run_open_loop)
 from .slo import STALL_FACTOR, SLOTracker
@@ -18,6 +18,7 @@ from .slo import STALL_FACTOR, SLOTracker
 __all__ = [
     "ARRIVALS", "ArrivalProcess", "ArrivalTrace", "DiurnalArrivals",
     "MMPPArrivals", "PoissonArrivals", "make_arrivals", "make_trace",
+    "multiplex",
     "DurabilityConfig", "FrontendConfig", "IngestFrontend", "run_open_loop",
     "STALL_FACTOR", "SLOTracker",
 ]

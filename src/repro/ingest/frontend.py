@@ -66,7 +66,7 @@ from repro.core.engine_api import OpBatch, OpKind, StorageEngine
 from repro.wal.faults import CrashPoint, FaultInjector, reach as _reach
 
 from .arrivals import ArrivalTrace
-from .slo import SLOTracker
+from .slo import STALL_FACTOR, SLOTracker
 
 _KIND_NAMES = {int(k): k.name.lower() for k in OpKind}
 _WRITE_KINDS = (int(OpKind.INSERT), int(OpKind.DELETE))
@@ -83,6 +83,11 @@ class FrontendConfig:
     #: deterministic surrogate service time per op for wall-clock engines
     #: (see module docstring); ignored on sim tiers.
     virtual_op_service_s: float = 5e-6
+    #: stall-attribution threshold (see ``repro.ingest.slo``): a commit is
+    #: a stall when its service time exceeds this multiple of the run's
+    #: typical commit service.  Recorded in ``report["stalls"]`` so sweeps
+    #: with different thresholds are self-describing.
+    stall_factor: float = STALL_FACTOR
 
     def __post_init__(self):
         assert self.max_queue >= 1 and self.commit_ops >= 1
@@ -90,6 +95,7 @@ class FrontendConfig:
             "a commit cannot exceed the queue bound"
         assert self.linger_s >= 0.0 and self.maintain_budget >= 0
         assert self.virtual_op_service_s > 0.0
+        assert self.stall_factor > 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +148,11 @@ class IngestFrontend:
             self._ckpt = EngineCheckpointer(
                 os.path.join(durability.directory, CHECKPOINT_SUBDIR),
                 injector=injector)
+            # restart-after-crash: opening an existing directory resumes the
+            # durable LSN chain where the previous frontend left it, so a
+            # resumed run's first commit is ``last_lsn + 1`` (LSN
+            # continuity) and its report never claims a stale watermark.
+            self.last_acked_lsn = self._wal.last_lsn
             # fsync cost is charged on the engine's own device constants
             # when it has any (sim tiers); the device tier measures wall
             # time instead, so its device constant is never read.
@@ -223,7 +234,7 @@ class IngestFrontend:
         """Serve ``trace``; returns the JSON-ready open-loop report."""
         cfg = self.config
         eng = self.engine
-        tracker = SLOTracker()
+        tracker = SLOTracker(stall_factor=cfg.stall_factor)
 
         # load phase: closed-loop, before the clock starts (not offered load).
         if len(trace.preload):

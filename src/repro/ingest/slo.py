@@ -7,11 +7,15 @@ JSON-ready report.
 
 Stall attribution: the frontend snapshots the engine's pending maintenance
 debt (``maintain(0)``) at every commit.  A commit whose *service* time
-exceeds ``STALL_FACTOR`` times the run's typical commit service time (the
+exceeds ``stall_factor`` times the run's typical commit service time (the
 larger of the median and the mean — buffered writes make the median
 degenerate to ~0 between avalanches) is a *stall* — the open-loop
 signature of a compaction avalanche — and the ops
 queued behind it at that moment are the ops whose latency it explains.
+The factor is a per-run knob (``FrontendConfig.stall_factor``; module
+default :data:`STALL_FACTOR`) and the value used is recorded in the
+report's ``stalls`` section, so sweeps run at different thresholds stay
+self-describing.
 ``debt_max`` over the same timeline is the deamortization ledger: a
 deamortized engine's debt stays at its per-step bound (0/1 for the refimpl
 NB-tree) no matter the offered load, while its queue may still grow; an
@@ -25,9 +29,11 @@ from __future__ import annotations
 
 import numpy as np
 
-#: a commit is a "stall" when its service time exceeds this multiple of the
-#: run's typical commit service time — max(median, mean), post-hoc, so the
-#: threshold is deterministic and scale-free across tiers/devices.
+#: default stall threshold: a commit is a "stall" when its service time
+#: exceeds this multiple of the run's typical commit service time —
+#: max(median, mean), post-hoc, so the threshold is deterministic and
+#: scale-free across tiers/devices.  Per-run override:
+#: ``FrontendConfig.stall_factor`` -> ``SLOTracker(stall_factor=...)``.
 STALL_FACTOR = 8.0
 
 #: log-spaced bucket edges, 1 ns .. ~1000 s, 4 buckets/decade (JSON-sized).
@@ -60,9 +66,17 @@ def _tail_summary(samples: np.ndarray) -> dict:
 
 
 class SLOTracker:
-    """Accumulates open-loop measurements; one instance per frontend run."""
+    """Accumulates open-loop measurements; one instance per serving stream.
 
-    def __init__(self, kinds: tuple = ("insert", "delete", "query", "range")):
+    The single-stream frontend runs one tracker; the multi-tenant frontend
+    (``repro.tenancy``) runs one per tenant plus an aggregate, all sharing
+    the run's ``stall_factor``.
+    """
+
+    def __init__(self, kinds: tuple = ("insert", "delete", "query", "range"),
+                 *, stall_factor: float = STALL_FACTOR):
+        assert stall_factor > 1.0
+        self.stall_factor = float(stall_factor)
         self._kinds = kinds
         self._e2e: dict = {k: [] for k in kinds}      # end-to-end seconds
         self._queue_delay: list = []                  # admission -> commit
@@ -102,8 +116,8 @@ class SLOTracker:
         # ---- stall attribution (see module docstring) ---------------------
         med = float(np.median(service_s)) if len(service_s) else 0.0
         typical = max(med, float(service_s.mean())) if len(service_s) else 0.0
-        stall_mask = (service_s > STALL_FACTOR * typical) if typical > 0.0 \
-            else np.zeros(len(service_s), bool)
+        stall_mask = (service_s > self.stall_factor * typical) \
+            if typical > 0.0 else np.zeros(len(service_s), bool)
         n_done = int(sum(len(v) for v in self._e2e.values()))
         n_shed = int(sum(self._shed.values()))
         total_busy = float(service_s.sum() + maintain_s.sum())
@@ -132,7 +146,7 @@ class SLOTracker:
                 "utilization": total_busy / max(t_end, 1e-12),
             },
             "stalls": {
-                "stall_factor": STALL_FACTOR,
+                "stall_factor": self.stall_factor,
                 "median_commit_service_s": med,
                 "typical_commit_service_s": typical,
                 "n_stall_commits": int(stall_mask.sum()),

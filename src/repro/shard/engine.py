@@ -282,6 +282,25 @@ class ShardedEngine(StorageEngine):
         order = np.argsort(rk, kind="stable")
         return rk[order], rv[order]
 
+    def dump_live_range(self, lo: int, hi: int) -> tuple:
+        """Range-scoped dump touching only intersecting shards.
+
+        A tenant namespace is one contiguous encoded interval
+        (``repro.tenancy``), so per-tenant snapshots and stats read a few
+        shards, not the whole ensemble — the scoped counterpart of the
+        RANGE fan-out.
+        """
+        if self.partitioner is None:
+            return (np.zeros(0, KEY_DTYPE), np.zeros(0, VAL_DTYPE))
+        dumps = [self._engines[s].dump_live_range(lo, hi)
+                 for s in self.partitioner.shards_for_range(int(lo), int(hi))]
+        if not dumps:
+            return (np.zeros(0, KEY_DTYPE), np.zeros(0, VAL_DTYPE))
+        rk = np.concatenate([d[0] for d in dumps])
+        rv = np.concatenate([d[1] for d in dumps])
+        order = np.argsort(rk, kind="stable")
+        return rk[order], rv[order]
+
     def stats(self) -> EngineStats:
         per = [e.stats() for e in self._engines]
         debts = [e.maintain(0) for e in self._engines]

@@ -248,12 +248,24 @@ class WriteAheadLog:
         return lsn, len(rec)
 
     # ---------------------------------------------------------------- replay
-    def replay(self, after_lsn: int = 0):
+    def replay(self, after_lsn: int = 0, *, key_lo: int | None = None,
+               key_hi: int | None = None):
         """Yield :class:`WalRecord` for every record with LSN > ``after_lsn``.
+
+        ``key_lo``/``key_hi`` (inclusive) restrict replay to ops whose key
+        falls inside the interval: records are filtered row-wise and
+        records left empty are skipped entirely.  A tenant namespace
+        (``repro.tenancy``) is one contiguous encoded-key interval, so this
+        is what lets recovery rebuild a single namespace without replaying
+        every co-tenant's writes — tenant identity rides in the key's high
+        bits, so the shared log needs no per-tenant records.
 
         Reads through independent handles, so replaying an open log (tests,
         live verification) is safe.
         """
+        lo = np.uint64(0 if key_lo is None else key_lo)
+        hi = np.uint64(np.iinfo(np.uint64).max if key_hi is None else key_hi)
+        filtered = key_lo is not None or key_hi is not None
         for seg in self._segments:
             if seg.last_lsn <= after_lsn or seg.size == 0:
                 continue
@@ -267,6 +279,11 @@ class WriteAheadLog:
                 if lsn <= after_lsn:
                     continue
                 kinds, keys, vals = _decode_payload(payload)
+                if filtered:
+                    m = (keys >= lo) & (keys <= hi)
+                    if not m.any():
+                        continue
+                    kinds, keys, vals = kinds[m], keys[m], vals[m]
                 yield WalRecord(lsn, kinds, keys, vals)
 
     # -------------------------------------------------------------- truncate

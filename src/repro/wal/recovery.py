@@ -52,33 +52,52 @@ class RecoveryResult:
     replayed_ops: int
     truncated_tail_bytes: int   # torn garbage discarded while opening
     recover_wall_s: float
+    #: inclusive encoded-key interval this recovery was scoped to
+    #: (None = the whole keyspace; see :func:`recover`'s ``key_range``).
+    key_range: tuple | None = None
 
 
-def recover(directory: str, engine_factory) -> RecoveryResult:
+def recover(directory: str, engine_factory, *,
+            key_range: tuple | None = None) -> RecoveryResult:
     """Rebuild an engine from ``directory``; see module docstring.
 
     ``engine_factory`` must build a *fresh, empty* engine configured like
     the one that crashed (same tier/knobs — recovery restores logical
     content, not physical layout).
+
+    ``key_range = (lo, hi)`` (inclusive) scopes recovery to one encoded-key
+    interval: the snapshot's live table is filtered to it and WAL replay
+    skips every op outside it.  A tenant namespace (``repro.tenancy``) is
+    exactly such an interval, so this is single-namespace recovery — one
+    tenant's data rebuilt from the shared log without paying for its
+    co-tenants' history.  ``last_lsn`` still reports the *global* durable
+    watermark (the LSN chain is shared).
     """
     # imported here, not at module top: checkpointer itself imports
     # repro.wal.faults, and a module-level import would close the cycle.
     from repro.checkpoint.checkpointer import EngineCheckpointer
 
     t0 = time.perf_counter()
+    lo = hi = None
+    if key_range is not None:
+        lo, hi = (int(key_range[0]), int(key_range[1]))
+        assert 0 <= lo <= hi
     ckpt = EngineCheckpointer(os.path.join(directory, CHECKPOINT_SUBDIR))
     snap = ckpt.load_latest_snapshot()
     engine = engine_factory()
     snap_lsn, snap_pairs = 0, 0
     if snap is not None:
         snap_lsn, keys, vals = snap
+        if key_range is not None:
+            m = (keys >= np.uint64(lo)) & (keys <= np.uint64(hi))
+            keys, vals = keys[m], vals[m]
         snap_pairs = len(keys)
         if snap_pairs:
             engine.apply(OpBatch.inserts(keys, vals))
             engine.drain()
     wal = WriteAheadLog(os.path.join(directory, WAL_SUBDIR))
     n_commits = n_ops = 0
-    for rec in wal.replay(after_lsn=snap_lsn):
+    for rec in wal.replay(after_lsn=snap_lsn, key_lo=lo, key_hi=hi):
         batch = OpBatch(rec.kinds, rec.keys, rec.vals,
                         np.zeros(len(rec), KEY_DTYPE))
         engine.apply(batch)
@@ -93,4 +112,4 @@ def recover(directory: str, engine_factory) -> RecoveryResult:
         engine=engine, last_lsn=last, snapshot_lsn=snap_lsn,
         snapshot_pairs=snap_pairs, replayed_commits=n_commits,
         replayed_ops=n_ops, truncated_tail_bytes=torn,
-        recover_wall_s=time.perf_counter() - t0)
+        recover_wall_s=time.perf_counter() - t0, key_range=key_range)

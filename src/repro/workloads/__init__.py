@@ -10,7 +10,9 @@ transplanted to the paper's five tiers.
 """
 from .generator import MIXES, Workload, WorkloadSpec, make_workload
 
-# NOTE: ``driver`` is intentionally not re-exported here — importing it at
-# package level would shadow ``python -m repro.workloads.driver`` (runpy's
-# sys.modules warning).  Import ``repro.workloads.driver`` directly.
+# NOTE: ``driver`` and ``tenants`` are intentionally not re-exported here —
+# ``driver`` at package level would shadow ``python -m repro.workloads.driver``
+# (runpy's sys.modules warning), and ``tenants`` imports ``repro.ingest``,
+# which imports this package back (generator) — a cycle at import time.
+# Import ``repro.workloads.driver`` / ``repro.workloads.tenants`` directly.
 __all__ = ["MIXES", "Workload", "WorkloadSpec", "make_workload"]

@@ -22,6 +22,18 @@ bounded queue + admission control, group commit, end-to-end latency =
 queueing + service.  ``--list-engines`` / ``--list-mixes`` enumerate the
 registries.  Emitted JSON carries ``schema_version`` (top level and per
 report) so bench trajectory files are comparable across PRs.
+
+**Multiple streams** (DESIGN.md §10): repeat ``--mix`` to drive one
+stream *per tenant*, each namespace-encoded into its own key interval
+(``repro.tenancy``) and reported with its own per-stream latency
+histograms.  Closed-loop, the streams interleave round-robin batch by
+batch; with ``--arrival`` they serve open-loop through the multi-tenant
+frontend (weighted-fair admission; ``--weights`` sets DRR shares,
+``--unfair`` swaps back the shared FIFO baseline)::
+
+    PYTHONPATH=src python -m repro.workloads.driver --engines nbtree \
+        --mix insert-heavy --mix point-read-heavy --weights 2 1 \
+        --arrival poisson --rate 4000 --out runs/two_tenants.json
 """
 from __future__ import annotations
 
@@ -45,7 +57,11 @@ from .generator import MIXES, Workload, make_workload
 #: v5: EngineStats.applied_lsn; open-loop reports gain a ``durability``
 #: section (WAL/checkpoint counters + charged fsync service) when the
 #: frontend runs with a DurabilityConfig (DESIGN.md §9).
-SCHEMA_VERSION = 5
+#: v6: multi-stream reports (repeated ``--mix``): closed-loop ``streams``
+#: sections with per-stream per-kind histograms + namespace intervals;
+#: open-loop multi-tenant reports (``tenants``/``admission``/``fair``
+#: sections from the tenancy frontend, DESIGN.md §10).
+SCHEMA_VERSION = 6
 
 
 class LatencyHistogram:
@@ -159,6 +175,103 @@ def run_open_workload(engine: StorageEngine, workload: Workload, *,
     return report
 
 
+def run_multi_workload(engine: StorageEngine, workloads: list, *,
+                       maintain_budget: int = 1, namespace=None) -> dict:
+    """Closed-loop multi-stream drive: one namespace per workload.
+
+    Stream *i*'s keys are encoded into tenant *i*'s interval
+    (``repro.tenancy.NamespaceMap``) and the streams interleave
+    round-robin batch by batch — deterministic contention on one shared
+    engine — with latencies recorded into per-stream per-kind histograms.
+    """
+    from repro.core.engine_api import OpBatch
+    from repro.tenancy import NamespaceMap
+
+    ns = namespace or NamespaceMap()
+    pre = [ns.encode_batch(i, wl.preload_batch())
+           for i, wl in enumerate(workloads)]
+    pre = [b for b in pre if len(b)]
+    n_pre = sum(len(b) for b in pre)
+    if pre:
+        engine.apply(OpBatch.concat(pre))
+        engine.drain()
+
+    hists = [{k: LatencyHistogram() for k in OpKind} for _ in workloads]
+    iters = [wl.batches() for wl in workloads]
+    alive = list(range(len(workloads)))
+    max_debt = 0
+    while alive:
+        for i in list(alive):
+            batch = next(iters[i], None)
+            if batch is None:
+                alive.remove(i)
+                continue
+            res = engine.apply(ns.encode_batch(i, batch))
+            for k in OpKind:
+                hists[i][k].add(res.latencies(k))
+            max_debt = max(max_debt, engine.maintain(maintain_budget))
+    debt_before_drain = engine.maintain(0)
+    engine.drain()
+
+    stats = engine.stats()
+    streams = []
+    for i, wl in enumerate(workloads):
+        lo, hi = ns.tenant_interval(i)
+        streams.append({
+            "stream": i,
+            "workload": dataclasses.asdict(wl.spec) | {
+                "mix": {OpKind(k).name.lower(): p
+                        for k, p in wl.spec.mix.items()}},
+            "interval": [int(lo), int(hi)],
+            "live_pairs": int(engine.count_live_range(lo, hi)),
+            "per_kind": {OpKind(k).name.lower(): h.to_dict()
+                         for k, h in hists[i].items() if h.samples},
+        })
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "engine": engine.name,
+        "namespace": ns.describe(),
+        "maintain_budget": maintain_budget,
+        "preload_pairs": n_pre,
+        "max_pending_debt": int(max_debt),
+        "pending_debt_before_drain": int(debt_before_drain),
+        "streams": streams,
+        "stats": dataclasses.asdict(stats),
+    }
+
+
+def run_open_multi_workload(engine: StorageEngine, workloads: list, *,
+                            arrival: str, rate: float,
+                            duration_s: float | None = None,
+                            maintain_budget: int = 1, weights=None,
+                            fair: bool = True) -> dict:
+    """Open-loop multi-stream drive through the multi-tenant frontend.
+
+    One tenant per workload; every tenant gets its own instance of the
+    named arrival process at ``rate`` (its trace seeded by its workload
+    seed, so streams stay independent).  ``weights`` sets the DRR shares
+    (default: equal); ``fair=False`` is the shared-FIFO baseline.
+    """
+    from repro.ingest import FrontendConfig, make_arrivals, make_trace
+    from repro.tenancy import TenantConfig, run_multi_tenant
+
+    tenants = [TenantConfig(i, name=wl.spec.name,
+                            weight=(float(weights[i]) if weights else 1.0))
+               for i, wl in enumerate(workloads)]
+    traces = {i: make_trace(wl, make_arrivals(arrival, rate),
+                            duration_s=duration_s)
+              for i, wl in enumerate(workloads)}
+    cfg = FrontendConfig(maintain_budget=maintain_budget)
+    report = run_multi_tenant(engine, tenants, traces, config=cfg, fair=fair)
+    report["schema_version"] = SCHEMA_VERSION
+    report["workloads"] = [
+        dataclasses.asdict(wl.spec) | {
+            "mix": {OpKind(k).name.lower(): p
+                    for k, p in wl.spec.mix.items()}}
+        for wl in workloads]
+    return report
+
+
 # ---------------------------------------------------------------- CLI harness
 _SMALL_CONFIGS = {
     # tiny-footprint constructor kwargs for smoke runs (CI, demos).
@@ -195,7 +308,14 @@ def main(argv=None) -> None:
                     help="print the registered engine names and exit")
     ap.add_argument("--list-mixes", action="store_true",
                     help="print the named workload mixes and exit")
-    ap.add_argument("--mix", default="ycsb-a", choices=sorted(MIXES))
+    ap.add_argument("--mix", action="append", choices=sorted(MIXES),
+                    help="workload mix; repeat for one stream per tenant "
+                         "(multi-stream mode, DESIGN.md §10). Default: ycsb-a")
+    ap.add_argument("--weights", nargs="+", type=float, default=None,
+                    help="multi-stream fair-share weights, one per --mix")
+    ap.add_argument("--unfair", action="store_true",
+                    help="multi-stream open loop: shared-FIFO baseline "
+                         "instead of weighted-fair admission")
     ap.add_argument("--ops", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--preload", type=int, default=2048)
@@ -235,6 +355,9 @@ def main(argv=None) -> None:
         return
 
     names = _resolve_engine_names(args.engines, ap)
+    mixes = args.mix or ["ycsb-a"]
+    if args.weights is not None and len(args.weights) != len(mixes):
+        ap.error("--weights needs exactly one value per --mix")
     overrides = dict(n_ops=args.ops, batch_size=args.batch,
                      preload=args.preload, key_space=args.key_space,
                      seed=args.seed)
@@ -249,7 +372,48 @@ def main(argv=None) -> None:
                                  partition=args.partition, **base_kw)
         else:
             engine = make_engine(name, **base_kw)
-        workload = make_workload(args.mix, **overrides)
+        if len(mixes) > 1:
+            # one stream per mix, each in its own namespace; decorrelate
+            # stream seeds the same way the scenario catalog does.
+            workloads = [make_workload(m, **overrides
+                                       | {"seed": args.seed * 1000 + i})
+                         for i, m in enumerate(mixes)]
+            if args.arrival:
+                report = run_open_multi_workload(
+                    engine, workloads, arrival=args.arrival, rate=args.rate,
+                    duration_s=args.duration,
+                    maintain_budget=args.maintain_budget,
+                    weights=args.weights, fair=not args.unfair)
+                reports.append(report)
+                ol = report["open_loop"]
+                print(f"{engine.name:>14} ({report['stats']['clock']}) "
+                      f"{len(mixes)} streams +{args.arrival}@{args.rate:g}/s "
+                      f"fair={ol['fair']}: shed={ol['n_shed']} "
+                      f"util={ol['server']['utilization']:.2f}")
+                for tid, t in sorted(ol["tenants"].items()):
+                    sub = t["open_loop"]
+                    ins = sub["per_kind_e2e"].get("insert", {})
+                    print(f"    stream {tid} ({t['name']}, w={t['weight']:g})"
+                          f": done={sub['n_done']} shed={sub['n_shed']} "
+                          f"insert p99.9={ins.get('p999_s', 0)*1e3:.3f}ms "
+                          f"live={t['live_pairs']}")
+            else:
+                report = run_multi_workload(
+                    engine, workloads, maintain_budget=args.maintain_budget)
+                reports.append(report)
+                print(f"{engine.name:>14} ({report['stats']['clock']}) "
+                      f"{len(mixes)} streams closed-loop: "
+                      f"pairs={report['stats']['total_pairs']}")
+                for s in report["streams"]:
+                    line = " ".join(
+                        f"{kind}[p50={h['p50_s']*1e3:.3f}ms "
+                        f"p99={h['p99_s']*1e3:.3f}ms]"
+                        for kind, h in s["per_kind"].items())
+                    print(f"    stream {s['stream']} "
+                          f"({s['workload']['name']}): {line} "
+                          f"live={s['live_pairs']}")
+            continue
+        workload = make_workload(mixes[0], **overrides)
         if args.arrival:
             report = run_open_workload(engine, workload,
                                        arrival=args.arrival, rate=args.rate,
@@ -259,7 +423,7 @@ def main(argv=None) -> None:
             ol = report["open_loop"]
             ins = ol["per_kind_e2e"].get("insert", {})
             print(f"{engine.name:>14} ({report['stats']['clock']}) "
-                  f"{args.mix}+{args.arrival}@{args.rate:g}/s: "
+                  f"{mixes[0]}+{args.arrival}@{args.rate:g}/s: "
                   f"util={ol['server']['utilization']:.2f} "
                   f"shed={ol['n_shed']} "
                   f"e2e insert p50={ins.get('p50_s', 0)*1e3:.3f}ms "
@@ -273,14 +437,15 @@ def main(argv=None) -> None:
         line = " ".join(
             f"{kind}[p50={h['p50_s']*1e3:.3f}ms p99={h['p99_s']*1e3:.3f}ms "
             f"p100={h['p100_s']*1e3:.3f}ms]" for kind, h in pk.items())
-        print(f"{engine.name:>14} ({report['stats']['clock']}) {args.mix}: "
+        print(f"{engine.name:>14} ({report['stats']['clock']}) {mixes[0]}: "
               f"{line} pairs={report['stats']['total_pairs']} "
               f"shards={report['stats']['shards']}")
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"schema_version": SCHEMA_VERSION, "mix": args.mix,
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "mix": mixes[0] if len(mixes) == 1 else list(mixes),
                        "seed": args.seed, "shards": args.shards,
                        "arrival": args.arrival,
                        "reports": reports}, f, indent=1)

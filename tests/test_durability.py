@@ -473,3 +473,77 @@ def test_heartbeat_declare_once_and_revive():
     mon.beat(1, 12)
     assert mon.advance(13) == [2]
     assert mon.advance(14) == []
+
+
+# ------------------------------------------------------- restart after crash
+def _resume_trace(n_ops=600, seed=9):
+    """Second serving window after a restart: no preload (the data is
+    already in the recovered engine), same keyspace so the two windows'
+    write sets genuinely overlap."""
+    wl = make_workload("delete-churn", key_space=1 << 14, n_ops=n_ops,
+                       preload=0, batch_size=128, seed=seed)
+    return make_trace(wl, PoissonArrivals(50_000.0))
+
+
+def _resume_frontend(directory, engine, ckpt_every=4):
+    """Fresh frontend over an already-recovered engine and the SAME durable
+    directory — the restart path."""
+    return IngestFrontend(
+        engine, FrontendConfig(max_queue=2048, commit_ops=32, linger_s=5e-4),
+        durability=DurabilityConfig(str(directory), segment_bytes=4096,
+                                    checkpoint_every_commits=ckpt_every))
+
+
+def test_restart_after_crash_resumes_lsn_chain(tmp_path):
+    """Crash mid-run, recover, serve a second trace through a fresh
+    frontend on the same directory: the first resumed commit continues the
+    LSN chain exactly where the durable watermark left it (no reuse, no
+    gap), and a final recovery equals the oracle of BOTH acked prefixes —
+    no acked write lost, none applied twice."""
+    trace1 = _durable_trace()
+    inj = FaultInjector(CrashPoint.AFTER_WAL_FSYNC, at_occurrence=9)
+    _, fe1 = _durable_frontend(tmp_path, injector=inj)
+    with pytest.raises(SimulatedCrash):
+        fe1.run(trace1)
+    assert inj.fired and len(fe1.acked) == 9
+
+    rr = _assert_recovered_equals_oracle(tmp_path, trace1, fe1)
+
+    fe2 = _resume_frontend(tmp_path, rr.engine)
+    assert fe2.last_acked_lsn == rr.last_lsn, \
+        "a reopened frontend must adopt the durable watermark, not claim 0"
+    trace2 = _resume_trace()
+    rep = fe2.run(trace2)
+    assert fe2.acked[0][0] == rr.last_lsn + 1, "LSN continuity across restart"
+    lsns = [a[0] for a in fe2.acked]
+    assert lsns == list(range(rr.last_lsn + 1, rr.last_lsn + 1 + len(lsns)))
+    assert rep["durability"]["last_acked_lsn"] == fe2.last_acked_lsn
+
+    # final recovery sees one continuous history: preload + acked1 + acked2.
+    rr2 = recover(str(tmp_path), lambda: make_engine("nbtree", f=3, sigma=64))
+    want = _oracle(trace1, list(fe1.acked) + list(fe2.acked))
+    rk, rv = rr2.engine.dump_live()
+    assert list(zip(rk.tolist(), rv.tolist())) == want, \
+        "restart lost or double-applied acked writes"
+    assert rr2.last_lsn == fe2.last_acked_lsn
+
+
+def test_restart_after_clean_shutdown_resumes_lsn_chain(tmp_path):
+    """Same resume path without a crash: run to completion, reopen, serve
+    more — the clean-shutdown boundary is just a crash with an empty
+    replay tail."""
+    trace1 = _durable_trace(n_ops=500)
+    _, fe1 = _durable_frontend(tmp_path)
+    fe1.run(trace1)
+    assert fe1.acked, "run must have acked commits"
+
+    rr = recover(str(tmp_path), lambda: make_engine("nbtree", f=3, sigma=64))
+    fe2 = _resume_frontend(tmp_path, rr.engine)
+    trace2 = _resume_trace(n_ops=400, seed=11)
+    fe2.run(trace2)
+    assert fe2.acked[0][0] == fe1.last_acked_lsn + 1
+
+    rr2 = recover(str(tmp_path), lambda: make_engine("nbtree", f=3, sigma=64))
+    want = _oracle(trace1, list(fe1.acked) + list(fe2.acked))
+    rk, rv = rr2.engine.dump_live()
+    assert list(zip(rk.tolist(), rv.tolist())) == want

@@ -10,9 +10,10 @@ wall-clock entries in the perf trajectory:
 
 * **insert ops/s** — end-to-end ingest wall-clock (insert + interleaved
   ``maintain`` + final drain) over the measured window,
-* **dispatches per flush unit** — counted through the
-  ``jax_nbtree._device_call`` funnel (the counting shim), split into
-  insert-path and maintenance-path budgets,
+* **dispatches per flush unit** — counted through the per-instance
+  ``NBTreeIndex.dispatch_count`` (every dispatch flows through the
+  ``jax_nbtree._device_call`` funnel), split into insert-path and
+  maintenance-path budgets,
 * **maintain-unit latency** — p50/p99/p100 wall-clock of individual
   ``maintain(1)`` work units (the deamortized stall quantum).
 
@@ -105,24 +106,24 @@ def _ingest(fused: bool, *, n_batches: int, warmup: int, batch: int,
     def one_batch(b, unit_times, disp):
         """Insert one batch then pay maintenance one timed unit at a time."""
         ks = keys[b * batch:(b + 1) * batch]
-        d0 = jnb.DISPATCH_COUNT
+        d0 = idx.dispatch_count
         t0 = time.perf_counter()
         idx.insert_batch(ks, np.arange(batch, dtype=np.int32))
         jax.block_until_ready(idx.run_keys)
-        disp["insert"] += jnb.DISPATCH_COUNT - d0
+        disp["insert"] += idx.dispatch_count - d0
         disp["insert_batches"] += 1
         for _ in range(budget):
             if not idx._pending:
                 break
             u0 = units["flush"] + units["split"]
-            d1 = jnb.DISPATCH_COUNT
+            d1 = idx.dispatch_count
             t1 = time.perf_counter()
             idx.maintain(1)
             jax.block_until_ready(idx.run_keys)
             dt = time.perf_counter() - t1
             if units["flush"] + units["split"] > u0:
                 unit_times.append(dt)
-                disp["maintain"] += jnb.DISPATCH_COUNT - d1
+                disp["maintain"] += idx.dispatch_count - d1
         return time.perf_counter() - t0
 
     # ---- warmup: compile every maintenance variant + steady the tree -------
@@ -142,11 +143,11 @@ def _ingest(fused: bool, *, n_batches: int, warmup: int, batch: int,
         wall += one_batch(b, unit_times, disp)
     t0 = time.perf_counter()
     n_drain_units0 = units["flush"] + units["split"]
-    d0 = jnb.DISPATCH_COUNT
+    d0 = idx.dispatch_count
     idx.drain()
     jax.block_until_ready(idx.run_keys)
     drain_s = time.perf_counter() - t0
-    disp["maintain"] += jnb.DISPATCH_COUNT - d0
+    disp["maintain"] += idx.dispatch_count - d0
     wall += drain_s
 
     n_units = units["flush"] + units["split"]

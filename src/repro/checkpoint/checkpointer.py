@@ -45,6 +45,7 @@ import json
 import os
 import shutil
 import threading
+import time as _time
 
 import numpy as np
 
@@ -91,9 +92,14 @@ def _fsync_dir(path: str) -> None:
 
 class Checkpointer:
     def __init__(self, directory: str, *,
-                 injector: FaultInjector | None = None):
+                 injector: FaultInjector | None = None, tracer=None):
         self.dir = directory
         self.injector = injector
+        # optional repro.obs tracer: wall-clock "checkpoint" spans around
+        # each synchronous save (async saves span the snapshot phase only);
+        # the sim-clock frontend charges its own spans and passes None.
+        self.tracer = tracer
+        self._t_origin = _time.perf_counter()
         os.makedirs(directory, exist_ok=True)
         # zero-cost NB-tree (manifest ops are host metadata, not disk sim).
         self.manifest = NBTree(f=4, sigma=1024, cost=CostModel(_NULL_DEVICE),
@@ -107,6 +113,7 @@ class Checkpointer:
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, tree, *, blocking: bool = True) -> None:
+        t_span0 = _time.perf_counter()
         self.wait()
         import jax
         flat = _flatten(tree)
@@ -139,6 +146,12 @@ class Checkpointer:
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
+        if self.tracer is not None:
+            self.tracer.complete("checkpoint", "save",
+                                 t_span0 - self._t_origin,
+                                 _time.perf_counter() - t_span0,
+                                 step=int(step), leaves=len(host),
+                                 blocking=bool(blocking))
 
     def _write(self, step: int, host: dict, mkeys, mvals, names) -> None:
         tmp = os.path.join(self.dir, f".tmp_step_{step}")

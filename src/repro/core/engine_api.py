@@ -37,12 +37,13 @@ reserved).  The workload generator (``repro.workloads``) enforces both.
 from __future__ import annotations
 
 import abc
-import collections
 import dataclasses
 import enum
 import time
 
 import numpy as np
+
+from repro.obs.metrics import LogBucketHistogram
 
 from .bepsilon import BEpsilonTree
 from .btree import BPlusTree, BPlusTreeBulk
@@ -190,9 +191,11 @@ class EngineStats:
     ``maintain_units`` / ``maintain_wall_s`` / ``maintain_unit_p50_s`` /
     ``maintain_unit_p99_s`` / ``maintain_unit_p100_s`` record the *real*
     wall-clock cost of maintenance work units on the device tier (each
-    ``maintain(1)`` step timed individually; totals are cumulative,
-    percentiles cover a bounded recent window so long runs stay O(1) per
-    snapshot), so open-loop runs — which charge a deterministic virtual
+    ``maintain(1)`` step timed individually; totals are cumulative, and
+    percentiles come from the shared bounded log-bucket histogram of
+    :mod:`repro.obs.metrics` — exact p100, bucket-resolution p50/p99 —
+    so long runs stay O(1) per snapshot), so open-loop runs — which
+    charge a deterministic virtual
     service time on wall-clock engines — still report the measured
     service cost of the fused emptying cascade.  Sim-clock tiers report
     zeros (their maintenance cost is already the charged I/O delta).
@@ -231,6 +234,11 @@ class EngineStats:
     maintain_unit_p50_s: float = 0.0
     maintain_unit_p99_s: float = 0.0
     maintain_unit_p100_s: float = 0.0
+    #: host->device kernel dispatches issued by THIS engine (device tier;
+    #: sharded ensembles sum across shards).  Per-instance — two engines
+    #: in one process count independently, unlike the former module-global
+    #: shim.  Sim tiers report 0.
+    device_dispatches: int = 0
     #: highest WAL commit LSN applied to this engine (0 = never ran under a
     #: durable frontend).  Written by the durable ingest path via
     #: :meth:`StorageEngine.note_applied`; the recovery invariant is that a
@@ -288,6 +296,18 @@ class StorageEngine(abc.ABC):
 
     def _do_range(self, lo: int, hi: int):
         raise UnsupportedOp(f"{self.name} does not support RANGE")
+
+    # ------------------------------------------------------------ observability
+    def attach_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.trace.Tracer` for span emission.
+
+        Base implementation is a no-op — engines with nothing structured
+        to report (the scalar cost-model tiers) simply ignore it.  The
+        device adapter forwards it to the kernel dispatch funnel
+        (per-dispatch + flush-unit spans); sharded ensembles forward to
+        every shard and emit split/debt events themselves.  Called by the
+        ingest frontends when observability is enabled.
+        """
 
     # ------------------------------------------------------------- maintenance
     def maintain(self, budget: int = 1) -> int:
@@ -575,13 +595,13 @@ class DeviceNBTreeEngine(StorageEngine):
         # wall-clock per maintenance work unit (each maintain(1) timed
         # individually) — the real service cost of the fused emptying
         # cascade, surfaced as EngineStats maintain-unit percentiles.
-        # Percentiles come from a bounded recent window so long-running
-        # servers don't grow memory or pay O(history) per stats() call;
-        # units/wall totals are cumulative.
-        self._maintain_unit_s: collections.deque = collections.deque(
-            maxlen=1 << 16)
-        self._maintain_units = 0
-        self._maintain_wall_s = 0.0
+        # Shared log-bucket histogram (repro.obs.metrics): O(#buckets)
+        # memory forever, exact count/total/p100, bucket-interpolated
+        # p50/p99 — so long-running servers pay O(1) per unit and per
+        # stats() snapshot.
+        self._maintain_unit_s = LogBucketHistogram()
+        self._t_origin = time.perf_counter()
+        self._tracer = None
 
     # ------------------------------------------------------------------ apply
     def apply(self, batch: OpBatch) -> OpResult:
@@ -666,9 +686,12 @@ class DeviceNBTreeEngine(StorageEngine):
             dt = time.perf_counter() - t0
             self._wall_s += dt
             if self.idx.units_done > u0:   # not a stale-entry-only pop
-                self._maintain_unit_s.append(dt)
-                self._maintain_units += 1
-                self._maintain_wall_s += dt
+                self._maintain_unit_s.add(dt)
+                if self._tracer is not None:
+                    self._tracer.complete(
+                        "flush_unit", "maintain_unit",
+                        t0 - self._t_origin, dt,
+                        unit=int(self.idx.units_done))
         return pending
 
     def drain(self) -> None:
@@ -708,8 +731,16 @@ class DeviceNBTreeEngine(StorageEngine):
     def height(self) -> int:
         return self.idx.height
 
+    def attach_tracer(self, tracer) -> None:
+        """Forward to the kernel layer: per-dispatch spans flow from the
+        ``NBTreeIndex`` dispatch funnel, flush-unit spans from
+        :meth:`maintain` — both on this engine's wall clock (seconds since
+        engine construction)."""
+        self._tracer = tracer
+        self.idx.attach_tracer(tracer, t_origin=self._t_origin)
+
     def stats(self) -> EngineStats:
-        mu = np.asarray(self._maintain_unit_s, np.float64)
+        mu = self._maintain_unit_s
         return EngineStats(
             engine=self.name, clock=self.clock, io_time_s=self._wall_s,
             io_seeks=0, io_bytes_read=0, io_bytes_written=0,
@@ -723,11 +754,12 @@ class DeviceNBTreeEngine(StorageEngine):
             bloom_probes=self.idx.bloom_probes,
             bloom_negative_skips=self.idx.bloom_negative_skips,
             bloom_false_positives=self.idx.bloom_false_positives,
-            maintain_units=self._maintain_units,
-            maintain_wall_s=self._maintain_wall_s,
-            maintain_unit_p50_s=float(np.percentile(mu, 50)) if mu.size else 0.0,
-            maintain_unit_p99_s=float(np.percentile(mu, 99)) if mu.size else 0.0,
-            maintain_unit_p100_s=float(mu.max()) if mu.size else 0.0,
+            maintain_units=mu.count,
+            maintain_wall_s=mu.total,
+            maintain_unit_p50_s=mu.quantile(0.50),
+            maintain_unit_p99_s=mu.quantile(0.99),
+            maintain_unit_p100_s=mu.max if mu.count else 0.0,
+            device_dispatches=self.idx.dispatch_count,
             applied_lsn=self.applied_lsn)
 
 

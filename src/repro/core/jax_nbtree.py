@@ -41,7 +41,8 @@ Host control metadata (node id, child ids, pivots) is routed in as scalars
 and tiny arrays; the only device->host traffic per flush is the returned
 (<= f+1)-element count vector.  Every device computation the index launches
 goes through the ``_device_call`` funnel, so dispatch budgets are
-observable (``DISPATCH_COUNT``) and regression-tested.  The pre-fusion
+observable (per-instance ``dispatch_count`` / ``dispatch_stats``, plus
+optional per-dispatch tracer spans) and regression-tested.  The pre-fusion
 eager path is kept under ``fused=False`` as the differential-testing and
 benchmarking baseline (``benchmarks/bench_ingest_device.py`` measures the
 before/after).
@@ -78,6 +79,7 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 from collections import Counter, deque
 
 import jax
@@ -93,23 +95,25 @@ KEY_MAX32 = np.uint32(0xFFFFFFFF)
 TOMBSTONE32 = np.int32(-(2**31))
 TILE = 1024
 
-#: cumulative device dispatches launched through :func:`_device_call` —
-#: the counting shim read by ``benchmarks/bench_ingest_device.py`` and the
-#: dispatch-budget regression test.
-DISPATCH_COUNT = 0
-
-
 def _device_call(fn, *args, **kwargs):
     """Single funnel for every device computation the index launches.
 
     One call == one device dispatch (each ``fn`` here is either a fused
     jitted impl or a single eager XLA op).  Kept as a module-level
-    indirection so benchmarks and tests can monkeypatch or read
-    ``DISPATCH_COUNT`` to assert dispatch budgets.
+    indirection so tests can monkeypatch it to intercept dispatches;
+    *counting* is per-instance (``NBTreeIndex.dispatch_count``, routed
+    through :meth:`NBTreeIndex._dispatch`), so concurrent engines —
+    sharded ensembles, fused-vs-eager side-by-side benchmarks — no longer
+    share mutable global state.
     """
-    global DISPATCH_COUNT
-    DISPATCH_COUNT += 1
     return fn(*args, **kwargs)
+
+
+def _tree_nbytes(x) -> int:
+    """Total array bytes in a (possibly nested) dispatch input/output."""
+    if isinstance(x, (tuple, list)):
+        return sum(_tree_nbytes(e) for e in x)
+    return int(getattr(x, "nbytes", 0))
 
 
 def _round_up(x: int, m: int) -> int:
@@ -519,6 +523,44 @@ class NBTreeIndex:
         self.bloom_probes = 0
         self.bloom_negative_skips = 0
         self.bloom_false_positives = 0
+        #: device dispatches issued by THIS index (per-instance; surfaced
+        #: as ``EngineStats.device_dispatches``).
+        self.dispatch_count = 0
+        #: per-impl measured totals ``{name: {count, wall_s, bytes}}``,
+        #: populated only while a tracer is attached (the roofline
+        #: measured-bandwidth source; see repro.roofline.analysis).
+        self.dispatch_stats: dict = {}
+        self._tracer = None
+        self._t_origin = 0.0
+
+    # ------------------------------------------------------------ dispatch
+    def attach_tracer(self, tracer, *, t_origin: float | None = None) -> None:
+        """Record per-dispatch wall spans (category ``dispatch``) and
+        per-impl timing/byte totals.  ``t_origin`` anchors span timestamps
+        (perf_counter seconds); defaults to attach time."""
+        self._tracer = tracer
+        self._t_origin = (time.perf_counter() if t_origin is None
+                          else t_origin)
+
+    def _dispatch(self, fn, *args, **kwargs):
+        """Per-instance dispatch shim over the module :func:`_device_call`
+        funnel (still monkeypatchable there).  Counting is always on and
+        O(1); timing + span emission only while a tracer is attached, so
+        the untraced hot path stays a counter bump."""
+        self.dispatch_count += 1
+        if self._tracer is None:
+            return _device_call(fn, *args, **kwargs)
+        name = getattr(fn, "__name__", None) or repr(fn)
+        t0 = time.perf_counter()
+        out = _device_call(fn, *args, **kwargs)
+        dt = time.perf_counter() - t0
+        st = self.dispatch_stats.setdefault(
+            name, {"count": 0, "wall_s": 0.0, "bytes": 0})
+        st["count"] += 1
+        st["wall_s"] += dt
+        st["bytes"] += _tree_nbytes(args) + _tree_nbytes(out)
+        self._tracer.complete("dispatch", name, t0 - self._t_origin, dt)
+        return out
 
     # --------------------------------------------------------- pending queue
     def _enqueue(self, node: _HostNode, front: bool = False) -> None:
@@ -557,26 +599,26 @@ class NBTreeIndex:
         n = int(keys.shape[0])
         if self._fused:
             (self.run_keys, self.run_vals, self.run_count, self.bloom) = \
-                _device_call(_insert_impl, self.run_keys, self.run_vals,
+                self._dispatch(_insert_impl, self.run_keys, self.run_vals,
                              self.run_count, self.bloom, keys, vals,
                              run_cap=self.run_cap, nbits=self.nbits,
                              h=self.h, interpret=ops._interpret())
             self.root.count += n
         else:
-            bk, bv = _device_call(_prepare_batch, keys, vals)
-            merged_k, merged_v = _device_call(
+            bk, bv = self._dispatch(_prepare_batch, keys, vals)
+            merged_k, merged_v = self._dispatch(
                 ops.merge_sorted, bk, bv,
                 self.run_keys[0, : self.run_cap], self.run_vals[0])
-            self.run_keys = _device_call(
+            self.run_keys = self._dispatch(
                 _write_row, self.run_keys, 0, merged_k[: self.run_cap])
-            self.run_vals = _device_call(
+            self.run_vals = self._dispatch(
                 _write_row, self.run_vals, 0, merged_v[: self.run_cap])
             self.root.count += n
-            self.run_count = _device_call(
+            self.run_count = self._dispatch(
                 self.run_count.at[0].set, self.root.count)
-            self.bloom = _device_call(
+            self.bloom = self._dispatch(
                 _write_row, self.bloom, 0,
-                _device_call(_build_bloom, self.run_keys[0], self.nbits,
+                self._dispatch(_build_bloom, self.run_keys[0], self.nbits,
                              self.h))
         assert self.root.count <= self.run_cap, "root run overflow: call maintain()"
         self.n_items += n
@@ -597,7 +639,7 @@ class NBTreeIndex:
         surfaced through ``EngineStats``.
         """
         q = jnp.asarray(keys, jnp.uint32)
-        present, out, n_probe, n_neg, n_fp = _device_call(
+        present, out, n_probe, n_neg, n_fp = self._dispatch(
             _query_batch_impl, self.pivots, self.nchild, self.children,
             self.run_keys, self.run_vals, self.run_count, self.bloom, q,
             f=self.f, levels=self.max_levels, run_cap=self.run_cap,
@@ -634,7 +676,7 @@ class NBTreeIndex:
         nodes = np.full((B, M), -1, np.int32)
         for b, r in enumerate(routes):
             nodes[b, : len(r)] = r
-        return _device_call(
+        return self._dispatch(
             _range_query_batch_impl,
             self.run_keys, self.run_vals, self.run_count,
             jnp.asarray(nodes), jnp.asarray(lo), jnp.asarray(hi),
@@ -713,7 +755,7 @@ class NBTreeIndex:
 
     def _grow_tables(self) -> None:
         (self.pivots, self.children, self.nchild, self.run_keys,
-         self.run_vals, self.run_count, self.bloom) = _device_call(
+         self.run_vals, self.run_count, self.bloom) = self._dispatch(
             _grow_impl, self.pivots, self.children, self.nchild,
             self.run_keys, self.run_vals, self.run_count, self.bloom)
         self.max_nodes *= 2
@@ -728,7 +770,7 @@ class NBTreeIndex:
     def _flush_fused(self, node: _HostNode) -> None:
         nc = len(node.children)
         (self.run_keys, self.run_vals, self.run_count, self.bloom,
-         counts) = _device_call(
+         counts) = self._dispatch(
             _flush_impl, self.run_keys, self.run_vals, self.run_count,
             self.bloom, jnp.int32(node.nid),
             jnp.asarray([c.nid for c in node.children], jnp.int32),
@@ -752,57 +794,57 @@ class NBTreeIndex:
             # Never split a duplicate group across the moved boundary (see
             # _flush_impl).
             k_cut = jnp.uint32(int(row_k[moved]))
-            left = int(_device_call(jnp.searchsorted, row_k, k_cut,
+            left = int(self._dispatch(jnp.searchsorted, row_k, k_cut,
                                     side="left"))
             if left > 0:
                 moved = min(left, moved)
             else:
-                moved = min(int(_device_call(jnp.searchsorted, row_k, k_cut,
+                moved = min(int(self._dispatch(jnp.searchsorted, row_k, k_cut,
                                              side="right")), node.count)
         piv = jnp.asarray([int(k) for k in node.skeys], jnp.uint32)
         cuts = jnp.minimum(
-            _device_call(jnp.searchsorted, row_k, piv, side="left"), moved)
+            self._dispatch(jnp.searchsorted, row_k, piv, side="left"), moved)
         cuts = np.asarray(cuts)                          # host ints, f-1 of them
         bounds = [0, *cuts.tolist(), moved]
         for i, child in enumerate(node.children):
             lo, hi = bounds[i], bounds[i + 1]
             if hi <= lo:
                 continue
-            part_k, part_v = _device_call(_window, row_k, row_v, jnp.int32(lo),
+            part_k, part_v = self._dispatch(_window, row_k, row_v, jnp.int32(lo),
                                           jnp.int32(hi - lo), self.sigma_pad)
-            mk, mv = _device_call(ops.merge_sorted, part_k, part_v,
+            mk, mv = self._dispatch(ops.merge_sorted, part_k, part_v,
                                   self.run_keys[child.nid],
                                   self.run_vals[child.nid])
             new_count = child.count + (hi - lo)
             if child.is_leaf:
-                mk, mv, live = _device_call(_compact_tombstones, mk, mv,
+                mk, mv, live = self._dispatch(_compact_tombstones, mk, mv,
                                             self.run_cap)
                 new_count = int(live)
             else:
                 mk, mv = mk[: self.run_cap], mv[: self.run_cap]
             assert new_count <= self.run_cap, "child run overflow"
-            self.run_keys = _device_call(_write_row, self.run_keys,
+            self.run_keys = self._dispatch(_write_row, self.run_keys,
                                          child.nid, mk)
-            self.run_vals = _device_call(_write_row, self.run_vals,
+            self.run_vals = self._dispatch(_write_row, self.run_vals,
                                          child.nid, mv)
             child.count = new_count
-            self.run_count = _device_call(
+            self.run_count = self._dispatch(
                 self.run_count.at[child.nid].set, new_count)
-            self.bloom = _device_call(
+            self.bloom = self._dispatch(
                 _write_row, self.bloom, child.nid,
-                _device_call(_build_bloom, mk, self.nbits, self.h))
+                self._dispatch(_build_bloom, mk, self.nbits, self.h))
         # the paper advances a lazy watermark; a device row rewrite is a
         # stream copy, so we compact immediately (DESIGN.md §2).
         rest = node.count - moved
-        rk, rv = _device_call(_window, row_k, row_v, jnp.int32(moved),
+        rk, rv = self._dispatch(_window, row_k, row_v, jnp.int32(moved),
                               jnp.int32(rest), self.run_cap)
-        self.run_keys = _device_call(_write_row, self.run_keys, nid, rk)
-        self.run_vals = _device_call(_write_row, self.run_vals, nid, rv)
+        self.run_keys = self._dispatch(_write_row, self.run_keys, nid, rk)
+        self.run_vals = self._dispatch(_write_row, self.run_vals, nid, rv)
         node.count = rest
-        self.run_count = _device_call(self.run_count.at[nid].set, rest)
-        self.bloom = _device_call(
+        self.run_count = self._dispatch(self.run_count.at[nid].set, rest)
+        self.bloom = self._dispatch(
             _write_row, self.bloom, nid,
-            _device_call(_build_bloom, rk, self.nbits, self.h))
+            self._dispatch(_build_bloom, rk, self.nbits, self.h))
 
     def _split_root_leaf(self) -> None:
         """First split: the root leaf becomes a root with two leaf children."""
@@ -870,7 +912,7 @@ class NBTreeIndex:
         if self._fused:
             has_key = at_key is not None
             (self.run_keys, self.run_vals, self.run_count, self.bloom,
-             out) = _device_call(
+             out) = self._dispatch(
                 _split_impl, self.run_keys, self.run_vals, self.run_count,
                 self.bloom, jnp.int32(node.nid), jnp.int32(left.nid),
                 jnp.int32(right.nid), jnp.int32(node.count),
@@ -886,40 +928,40 @@ class NBTreeIndex:
         if at_key is None:
             mid = node.count // 2
             k_m = int(np.asarray(row_k[mid]))
-            cut = int(np.asarray(_device_call(
+            cut = int(np.asarray(self._dispatch(
                 jnp.searchsorted, row_k, jnp.uint32(k_m), side="left")))
         else:
             k_m = int(at_key)
-            cut = int(np.asarray(_device_call(
+            cut = int(np.asarray(self._dispatch(
                 jnp.searchsorted, row_k, jnp.uint32(k_m), side="left")))
             cut = min(cut, node.count)
         for dst, lo, ln in ((left, 0, cut), (right, cut, node.count - cut)):
-            dk, dv = _device_call(_window, row_k, row_v, jnp.int32(lo),
+            dk, dv = self._dispatch(_window, row_k, row_v, jnp.int32(lo),
                                   jnp.int32(ln), self.run_cap)
-            self.run_keys = _device_call(_write_row, self.run_keys, dst.nid, dk)
-            self.run_vals = _device_call(_write_row, self.run_vals, dst.nid, dv)
+            self.run_keys = self._dispatch(_write_row, self.run_keys, dst.nid, dk)
+            self.run_vals = self._dispatch(_write_row, self.run_vals, dst.nid, dv)
             dst.count = ln
-            self.run_count = _device_call(self.run_count.at[dst.nid].set, ln)
-            self.bloom = _device_call(
+            self.run_count = self._dispatch(self.run_count.at[dst.nid].set, ln)
+            self.bloom = self._dispatch(
                 _write_row, self.bloom, dst.nid,
-                _device_call(_build_bloom, dk, self.nbits, self.h))
+                self._dispatch(_build_bloom, dk, self.nbits, self.h))
         return k_m
 
     def _clear_run(self, node) -> None:
         nid = node.nid
         if self._fused:
             (self.run_keys, self.run_vals, self.run_count, self.bloom) = \
-                _device_call(_clear_impl, self.run_keys, self.run_vals,
+                self._dispatch(_clear_impl, self.run_keys, self.run_vals,
                              self.run_count, self.bloom, jnp.int32(nid))
         else:
-            self.run_keys = _device_call(
+            self.run_keys = self._dispatch(
                 _write_row, self.run_keys, nid,
                 jnp.full(self.run_cap, KEY_MAX32, jnp.uint32))
-            self.run_vals = _device_call(
+            self.run_vals = self._dispatch(
                 _write_row, self.run_vals, nid,
                 jnp.zeros(self.run_cap, jnp.int32))
-            self.run_count = _device_call(self.run_count.at[nid].set, 0)
-            self.bloom = _device_call(
+            self.run_count = self._dispatch(self.run_count.at[nid].set, 0)
+            self.bloom = self._dispatch(
                 _write_row, self.bloom, nid,
                 jnp.zeros(self.nbits // 32, jnp.uint32))
         node.count = 0
@@ -934,16 +976,16 @@ class NBTreeIndex:
         for i, c in enumerate(node.children[: self.f]):
             ch[i] = c.nid
         if self._fused:
-            (self.pivots, self.children, self.nchild) = _device_call(
+            (self.pivots, self.children, self.nchild) = self._dispatch(
                 _sync_impl, self.pivots, self.children, self.nchild,
                 jnp.int32(nid), jnp.asarray(pv), jnp.asarray(ch),
                 jnp.int32(len(node.children)))
         else:
-            self.pivots = _device_call(self.pivots.at[nid].set,
+            self.pivots = self._dispatch(self.pivots.at[nid].set,
                                        jnp.asarray(pv))
-            self.children = _device_call(self.children.at[nid].set,
+            self.children = self._dispatch(self.children.at[nid].set,
                                          jnp.asarray(ch))
-            self.nchild = _device_call(self.nchild.at[nid].set,
+            self.nchild = self._dispatch(self.nchild.at[nid].set,
                                        len(node.children))
 
     # ------------------------------------------------------------- invariants

@@ -63,6 +63,9 @@ import numpy as np
 
 from repro.core.cost_model import PAIR_BYTES, SSD
 from repro.core.engine_api import OpBatch, OpKind, StorageEngine
+from repro.obs.metrics import ObsConfig, WindowedMetrics
+from repro.obs.stall import attribute_stalls, detect_stalls
+from repro.obs.trace import Tracer
 from repro.wal.faults import CrashPoint, FaultInjector, reach as _reach
 
 from .arrivals import ArrivalTrace
@@ -123,11 +126,20 @@ class IngestFrontend:
 
     def __init__(self, engine: StorageEngine, config: FrontendConfig | None = None,
                  durability: DurabilityConfig | None = None,
-                 injector: FaultInjector | None = None):
+                 injector: FaultInjector | None = None,
+                 obs: ObsConfig | None = None):
         self.engine = engine
         self.config = config or FrontendConfig()
         self.durability = durability
         self._injector = injector
+        # observability is strictly opt-in: when ``obs`` is None (or
+        # disabled) every hook below is a single attribute check, so the
+        # serving loop's timings are identical to the pre-obs frontend.
+        self.obs = obs if (obs is not None and obs.enabled) else None
+        self.tracer: Tracer | None = None
+        if self.obs is not None:
+            self.tracer = Tracer(capacity=self.obs.trace_capacity)
+            engine.attach_tracer(self.tracer)
         # the engine self-reports its clock domain via stats(); adapters set
         # a class attribute, so probing one snapshot is cheap and universal.
         self.sim_clock = engine.stats().clock == "sim"
@@ -229,12 +241,37 @@ class IngestFrontend:
             _reach(self._injector, CrashPoint.MID_CASCADE)
         return debt
 
+    # ------------------------------------------------------------ observability
+    def _finish_obs(self, wm: WindowedMetrics, t_end: float) -> dict:
+        """Close the windowed timeline, attribute stalls against the span
+        buffer, optionally save the Chrome trace, and return the report
+        block.  Shared by the single- and multi-tenant serving loops."""
+        obs, tracer = self.obs, self.tracer
+        block = wm.finish(t_end)
+        stalls = detect_stalls(wm.windows, k=obs.stall_k,
+                               trailing=obs.stall_trailing)
+        block["stalls"] = attribute_stalls(stalls, tracer.events())
+        block["trace"] = {
+            "events": len(tracer),
+            "dropped_events": tracer.dropped_events,
+            "categories": sorted(tracer.categories()),
+        }
+        if obs.trace_path:
+            tracer.save(obs.trace_path)
+            block["trace"]["path"] = obs.trace_path
+        return block
+
     # ----------------------------------------------------------------- running
     def run(self, trace: ArrivalTrace, *, drain: bool = True) -> dict:
         """Serve ``trace``; returns the JSON-ready open-loop report."""
         cfg = self.config
         eng = self.engine
         tracker = SLOTracker(stall_factor=cfg.stall_factor)
+        obs, tracer = self.obs, self.tracer
+        wm = None
+        if obs is not None:
+            wm = WindowedMetrics(obs.window_s, stall_k=obs.stall_k,
+                                 stall_trailing=obs.stall_trailing)
 
         # load phase: closed-loop, before the clock starts (not offered load).
         if len(trace.preload):
@@ -263,13 +300,25 @@ class IngestFrontend:
             admission decision it would see at its own arrival instant.
             """
             i = self._i
+            # shed instants are coalesced per poll (one event per kind with
+            # a count) so a long overload burst cannot flood the trace ring
+            # and evict the cascade/checkpoint spans attribution needs
+            shed_t0: dict[str, float] = {}
+            shed_n: dict[str, int] = {}
             while i < n and t_arr[i] <= t:
                 if len(queue) < cfg.max_queue:
                     queue.append(i)
                     tracker.record_queue_depth(len(queue))
                 else:
-                    tracker.record_shed(_KIND_NAMES[int(kinds[i])])
+                    kname = _KIND_NAMES[int(kinds[i])]
+                    tracker.record_shed(kname)
+                    if obs is not None:
+                        shed_t0.setdefault(kname, t_arr[i])
+                        shed_n[kname] = shed_n.get(kname, 0) + 1
+                        wm.record_shed(t_arr[i])
                 i += 1
+            for kname, t0 in shed_t0.items():
+                tracer.instant("shed", kname, t0, count=shed_n[kname])
             self._i = i
 
         while queue or self._i < n:
@@ -328,12 +377,14 @@ class IngestFrontend:
 
             # ---- periodic checkpoint: snapshot @ LSN, truncate WAL --------
             self._n_commits += 1
+            ckpt_s = 0.0
             if (self._ckpt is not None
                     and self.durability.checkpoint_every_commits
                     and self._n_commits
                     % self.durability.checkpoint_every_commits == 0
                     and self._wal.last_lsn > self._ckpt_lsn):
-                maintain_s += self._checkpoint()
+                ckpt_s = self._checkpoint()
+                maintain_s += ckpt_s
 
             done = t_commit + wal_s + np.cumsum(op_service)
             tracker.record_commit(
@@ -343,6 +394,29 @@ class IngestFrontend:
                 queue_delay_s=t_commit - t_arr[idx],
                 qdepth_after=len(queue),
                 service_s=service_s, maintain_s=maintain_s, debt=int(debt))
+            if obs is not None:
+                # spans carry *charged* durations on the same clock as the
+                # latency math, so the saved trace is byte-deterministic on
+                # sim tiers (and virtual-clock-consistent on the device tier)
+                if wal_s > 0.0:
+                    tracer.complete("wal_fsync", "fsync", t_commit, wal_s,
+                                    lsn=int(self.last_acked_lsn))
+                tracer.complete("commit", "group_commit", t_commit,
+                                service_s, ops=len(idx),
+                                qdepth=len(queue))
+                cascade_s = maintain_s - ckpt_s
+                if cascade_s > 0.0:
+                    tracer.complete("cascade", "maintain",
+                                    t_commit + service_s, cascade_s,
+                                    budget=cfg.maintain_budget,
+                                    debt=int(debt))
+                if ckpt_s > 0.0:
+                    tracer.complete("checkpoint", "snapshot",
+                                    t_commit + service_s + cascade_s,
+                                    ckpt_s, lsn=int(self._ckpt_lsn),
+                                    pairs=int(self._last_snapshot_pairs))
+                wm.record(t_commit, done - t_arr[idx], ops=len(idx),
+                          queue_depth=len(queue), debt=int(debt))
             t_free = t_commit + service_s + maintain_s
 
         t_end = t_free
@@ -356,6 +430,8 @@ class IngestFrontend:
         report["service_model"] = "charged" if self.sim_clock else "virtual"
         report["pending_debt_at_end"] = int(debt_final)
         report["config"] = dataclasses.asdict(self.config)
+        if obs is not None:
+            report["obs"] = self._finish_obs(wm, t_end)
         if self._wal is not None:
             self._wal.close()
             report["durability"] = {
@@ -376,14 +452,15 @@ class IngestFrontend:
 
 def run_open_loop(engine: StorageEngine, trace: ArrivalTrace, *,
                   config: FrontendConfig | None = None,
-                  durability: DurabilityConfig | None = None) -> dict:
+                  durability: DurabilityConfig | None = None,
+                  obs: ObsConfig | None = None) -> dict:
     """One-call harness: serve ``trace`` on ``engine``, full JSON report.
 
     The returned dict mirrors the closed-loop driver report shape (engine
     name, arrival description, final ``stats()`` snapshot) with the
     open-loop SLO section under ``"open_loop"``.
     """
-    fe = IngestFrontend(engine, config, durability=durability)
+    fe = IngestFrontend(engine, config, durability=durability, obs=obs)
     ol = fe.run(trace)
     stats = engine.stats()
     return {

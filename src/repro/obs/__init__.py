@@ -1,0 +1,38 @@
+"""Unified observability layer (DESIGN.md §11).
+
+The paper's headline claim is *consistency* — worst-case insertion delays
+up to three orders of magnitude below LSM compaction stalls — but an
+end-of-run percentile cannot show it: a mid-run saw-tooth and a flat
+timeline can share the same p99.  Luo & Carey ("On Performance Stability
+in LSM-based Storage Systems") argue the honest metrics are *windowed*
+timelines and the stall-free window percentage; the fluctuation score
+follows "Towards a B+-tree with Fluctuation-Free Performance".  This
+package provides those metrics plus a structured span tracer whose output
+loads directly in Perfetto, all behind :class:`ObsConfig` so the layer is
+strictly zero-cost when disabled.
+
+- :mod:`repro.obs.metrics` — log-bucket histograms (the one shared
+  implementation; the driver and device engine both use it), windowed
+  metric rollover, fluctuation/stall-free scoring.
+- :mod:`repro.obs.trace` — bounded ring-buffer span tracer emitting Chrome
+  ``trace_event`` JSON.
+- :mod:`repro.obs.stall` — stalled-window detection and attribution to
+  the dominant concurrent span category.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (LogBucketHistogram, ObsConfig,
+                               WindowedMetrics)
+from repro.obs.stall import attribute_stalls, detect_stalls
+from repro.obs.trace import SPAN_CATEGORIES, Tracer, validate_chrome_trace
+
+__all__ = [
+    "LogBucketHistogram",
+    "ObsConfig",
+    "WindowedMetrics",
+    "Tracer",
+    "SPAN_CATEGORIES",
+    "detect_stalls",
+    "attribute_stalls",
+    "validate_chrome_trace",
+]

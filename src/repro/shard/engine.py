@@ -74,11 +74,23 @@ class ShardedEngine(StorageEngine):
         self.n_splits = 0
         # monotone counters of shards retired by rebalances
         # (io_s, seeks, rd, wr, bloom probes / skips / false positives,
-        #  maintain units, maintain wall seconds)
-        self._retired = [0.0, 0, 0, 0, 0, 0, 0, 0, 0.0]
+        #  maintain units, maintain wall seconds, device dispatches)
+        self._retired = [0.0, 0, 0, 0, 0, 0, 0, 0, 0.0, 0]
+        self._tracer = None
         if partition == "hash":
             self.partitioner = HashPartitioner(shards)
             self._spawn_all()
+
+    # ------------------------------------------------------------ observability
+    def attach_tracer(self, tracer) -> None:
+        """Forward the tracer to every shard (current and future) and emit
+        ensemble-level events: one ``shard_split`` instant per rebalance
+        and a ``cascade`` debt-allocation instant whenever the scheduler
+        hands out budget.  Event timestamps are the ensemble's *charged*
+        I/O seconds — deterministic on sim tiers, and monotone."""
+        self._tracer = tracer
+        for e in self._engines:
+            e.attach_tracer(tracer)
 
     # ------------------------------------------------------------ construction
     def _make_shard(self) -> StorageEngine:
@@ -90,6 +102,9 @@ class ShardedEngine(StorageEngine):
         self._debts = [0] * n
         self._approx_live = [0] * n
         self._inherited_s = [0.0] * n   # retired predecessors' charged time
+        if self._tracer is not None:
+            for e in self._engines:
+                e.attach_tracer(self._tracer)
 
     def _bootstrap(self, batch: OpBatch) -> None:
         """Sample range pivots from the first batch (insert keys preferred)."""
@@ -186,6 +201,9 @@ class ShardedEngine(StorageEngine):
             return 0
         budget = int(budget)
         alloc = self._sched.allocate(self._debts, budget)
+        if self._tracer is not None and sum(alloc) > 0:
+            self._tracer.instant("cascade", "debt_alloc", self.io_time_s(),
+                                 debts=list(self._debts), alloc=list(alloc))
         for s, units in enumerate(alloc):
             if units:
                 self._debts[s] = self._engines[s].maintain(units)
@@ -247,9 +265,18 @@ class ShardedEngine(StorageEngine):
         self._retired[6] += st.bloom_false_positives
         self._retired[7] += st.maintain_units
         self._retired[8] += st.maintain_wall_s
+        self._retired[9] += st.device_dispatches
         lineage_s = self._inherited_s[sid] + eng.io_time_s()
         left = rk < np.uint64(q)
         a, b = self._make_shard(), self._make_shard()
+        if self._tracer is not None:
+            a.attach_tracer(self._tracer)
+            b.attach_tracer(self._tracer)
+            self._tracer.instant(
+                "shard_split", "split", self.io_time_s(), shard=int(sid),
+                pivot=int(q), left_pairs=int(left.sum()),
+                right_pairs=int((~left).sum()),
+                n_shards=len(self._engines) + 1)
         a.apply(OpBatch.inserts(rk[left], rv[left]))
         b.apply(OpBatch.inserts(rk[~left], rv[~left]))
         self.partitioner.split(sid, q)
@@ -343,4 +370,6 @@ class ShardedEngine(StorageEngine):
                                     default=0.0),
             maintain_unit_p100_s=max((s.maintain_unit_p100_s for s in per),
                                      default=0.0),
+            device_dispatches=self._retired[9] + sum(s.device_dispatches
+                                                     for s in per),
             applied_lsn=self.applied_lsn)

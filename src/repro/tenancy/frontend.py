@@ -137,8 +137,9 @@ class MultiTenantFrontend(IngestFrontend):
                  config: FrontendConfig | None = None,
                  durability: DurabilityConfig | None = None,
                  injector: FaultInjector | None = None, *,
-                 namespace: NamespaceMap | None = None, fair: bool = True):
-        super().__init__(engine, config, durability, injector)
+                 namespace: NamespaceMap | None = None, fair: bool = True,
+                 obs=None):
+        super().__init__(engine, config, durability, injector, obs=obs)
         assert tenants, "at least one tenant required"
         self.tenants = {int(t.tenant_id): t for t in tenants}
         assert len(self.tenants) == len(tenants), "duplicate tenant ids"
@@ -197,6 +198,12 @@ class MultiTenantFrontend(IngestFrontend):
         agg = SLOTracker(stall_factor=cfg.stall_factor)
         trackers = {tid: SLOTracker(stall_factor=cfg.stall_factor)
                     for tid in self.tenants}
+        obs, tracer = self.obs, self.tracer
+        wm = None
+        if obs is not None:
+            from repro.obs.metrics import WindowedMetrics
+            wm = WindowedMetrics(obs.window_s, stall_k=obs.stall_k,
+                                 stall_trailing=obs.stall_trailing)
 
         # encode every tenant's ops/preload into its namespace up front —
         # one vectorized pass per tenant, and the per-commit gather below
@@ -223,6 +230,11 @@ class MultiTenantFrontend(IngestFrontend):
 
         def admit_until(t: float) -> None:
             i = self._i
+            # coalesced per poll (one instant per tenant+kind with a count),
+            # matching the single-tenant frontend: per-op instants under a
+            # sustained overload would evict every span from the trace ring
+            shed_t0: dict[tuple[int, str], float] = {}
+            shed_n: dict[tuple[int, str], int] = {}
             while i < n and mt[i] <= t:
                 tid, loc = int(msid[i]), int(mloc[i])
                 kname = _KIND_NAMES[int(enc[tid].kinds[loc])]
@@ -232,7 +244,14 @@ class MultiTenantFrontend(IngestFrontend):
                 else:
                     trackers[tid].record_shed(kname)
                     agg.record_shed(kname)
+                    if obs is not None:
+                        shed_t0.setdefault((tid, kname), mt[i])
+                        shed_n[(tid, kname)] = shed_n.get((tid, kname), 0) + 1
+                        wm.record_shed(mt[i])
                 i += 1
+            for (tid, kname), t0 in shed_t0.items():
+                tracer.instant("shed", kname, t0, tenant=tid,
+                               count=shed_n[(tid, kname)])
             self._i = i
 
         while q.backlog() or self._i < n:
@@ -254,6 +273,15 @@ class MultiTenantFrontend(IngestFrontend):
             admit_until(t_commit)
 
             take = q.take(cfg.commit_ops)
+            if obs is not None and self.fair:
+                # a tenant with backlog that got ZERO slots this commit was
+                # deferred by the DRR scheduler — the throttle event.
+                served_tids = {p[0] for p in take}
+                for tid in self.tenants:
+                    if tid not in served_tids and q.backlog(tid) > 0:
+                        tracer.instant("tenant_throttle", "drr_defer",
+                                       t_commit, tenant=int(tid),
+                                       backlog=int(q.backlog(tid)))
             sel_t = np.asarray([p[0] for p in take], np.int64)
             sel_i = np.asarray([p[1] for p in take], np.int64)
             m = len(take)
@@ -298,14 +326,35 @@ class MultiTenantFrontend(IngestFrontend):
                 maintain_s = cfg.virtual_op_service_s * cfg.maintain_budget
 
             self._n_commits += 1
+            ckpt_s = 0.0
             if (self._ckpt is not None
                     and self.durability.checkpoint_every_commits
                     and self._n_commits
                     % self.durability.checkpoint_every_commits == 0
                     and self._wal.last_lsn > self._ckpt_lsn):
-                maintain_s += self._checkpoint()
+                ckpt_s = self._checkpoint()
+                maintain_s += ckpt_s
 
             done = t_commit + wal_s + np.cumsum(op_service)
+            if obs is not None:
+                if wal_s > 0.0:
+                    tracer.complete("wal_fsync", "fsync", t_commit, wal_s,
+                                    lsn=int(self.last_acked_lsn))
+                tracer.complete("commit", "group_commit", t_commit,
+                                service_s, ops=m, qdepth=q.backlog())
+                cascade_s = maintain_s - ckpt_s
+                if cascade_s > 0.0:
+                    tracer.complete("cascade", "maintain",
+                                    t_commit + service_s, cascade_s,
+                                    budget=cfg.maintain_budget,
+                                    debt=int(debt))
+                if ckpt_s > 0.0:
+                    tracer.complete("checkpoint", "snapshot",
+                                    t_commit + service_s + cascade_s,
+                                    ckpt_s, lsn=int(self._ckpt_lsn),
+                                    pairs=int(self._last_snapshot_pairs))
+                wm.record(t_commit, done - arr, ops=m,
+                          queue_depth=q.backlog(), debt=int(debt))
             knames = [_KIND_NAMES[int(k)] for k in bkinds]
             agg.record_commit(
                 t_commit=t_commit, kinds=knames, e2e_s=done - arr,
@@ -346,6 +395,8 @@ class MultiTenantFrontend(IngestFrontend):
         report["namespace"] = ns.describe()
         report["admission"] = q.stats()
         report["snapshots"] = self.snapshots.stats()
+        if obs is not None:
+            report["obs"] = self._finish_obs(wm, t_end)
 
         tenants_out = {}
         for tid in sorted(self.tenants):
@@ -389,10 +440,10 @@ def run_multi_tenant(engine: StorageEngine, tenants: list, traces: dict, *,
                      config: FrontendConfig | None = None,
                      durability: DurabilityConfig | None = None,
                      namespace: NamespaceMap | None = None,
-                     fair: bool = True) -> dict:
+                     fair: bool = True, obs=None) -> dict:
     """One-call harness: serve every tenant's trace, full JSON report."""
     fe = MultiTenantFrontend(engine, tenants, config, durability,
-                             namespace=namespace, fair=fair)
+                             namespace=namespace, fair=fair, obs=obs)
     ol = fe.run(traces)
     stats = engine.stats()
     return {

@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import time as _time
 import zlib
 
 import numpy as np
@@ -114,11 +115,16 @@ class WriteAheadLog:
     """
 
     def __init__(self, directory: str, *, segment_bytes: int = 1 << 20,
-                 injector: FaultInjector | None = None):
+                 injector: FaultInjector | None = None, tracer=None):
         assert segment_bytes >= 4096
         self.dir = directory
         self.segment_bytes = int(segment_bytes)
         self.injector = injector
+        # optional repro.obs tracer: one wall-clock "wal_fsync" span per
+        # append_commit (standalone/device use; the sim-clock frontend
+        # emits its own charged spans instead and passes no tracer here).
+        self.tracer = tracer
+        self._t_origin = _time.perf_counter()
         os.makedirs(directory, exist_ok=True)
         # counters (cumulative since open; JSON-ready via stats()).
         self.appends = 0
@@ -219,6 +225,7 @@ class WriteAheadLog:
 
         Blocks until the record is fsynced — the caller's ack instant.
         """
+        t_span0 = _time.perf_counter()
         lsn = self.last_lsn + 1
         payload = _encode_payload(kinds, keys, vals)
         rec = _HEADER.pack(_MAGIC, len(payload), lsn,
@@ -245,6 +252,11 @@ class WriteAheadLog:
         seg.size = pos + len(rec)
         seg.last_lsn = lsn
         self.last_lsn = lsn
+        if self.tracer is not None:
+            self.tracer.complete("wal_fsync", "append_commit",
+                                 t_span0 - self._t_origin,
+                                 _time.perf_counter() - t_span0,
+                                 lsn=int(lsn), nbytes=len(rec))
         return lsn, len(rec)
 
     # ---------------------------------------------------------------- replay

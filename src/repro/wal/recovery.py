@@ -58,8 +58,13 @@ class RecoveryResult:
 
 
 def recover(directory: str, engine_factory, *,
-            key_range: tuple | None = None) -> RecoveryResult:
+            key_range: tuple | None = None,
+            tracer=None) -> RecoveryResult:
     """Rebuild an engine from ``directory``; see module docstring.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) records one wall-clock
+    ``recovery`` span covering the whole rebuild — snapshot load + WAL
+    replay — with the replay counts in its args.
 
     ``engine_factory`` must build a *fresh, empty* engine configured like
     the one that crashed (same tier/knobs — recovery restores logical
@@ -108,8 +113,15 @@ def recover(directory: str, engine_factory, *,
     torn = wal.truncated_tail_bytes
     last = max(snap_lsn, wal.last_lsn)
     wal.close()
+    wall = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.complete("recovery", "recover", 0.0, wall,
+                        snapshot_lsn=int(snap_lsn), last_lsn=int(last),
+                        replayed_commits=int(n_commits),
+                        replayed_ops=int(n_ops),
+                        truncated_tail_bytes=int(torn))
     return RecoveryResult(
         engine=engine, last_lsn=last, snapshot_lsn=snap_lsn,
         snapshot_pairs=snap_pairs, replayed_commits=n_commits,
         replayed_ops=n_ops, truncated_tail_bytes=torn,
-        recover_wall_s=time.perf_counter() - t0, key_range=key_range)
+        recover_wall_s=wall, key_range=key_range)

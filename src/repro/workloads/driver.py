@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.engine_api import (FIVE_TIERS, OpKind, StorageEngine,
                                    available_engines, make_engine)
+from repro.obs.metrics import BUCKET_EDGES_S, LogBucketHistogram, ObsConfig
 
 from .generator import MIXES, Workload, make_workload
 
@@ -61,53 +62,49 @@ from .generator import MIXES, Workload, make_workload
 #: sections with per-stream per-kind histograms + namespace intervals;
 #: open-loop multi-tenant reports (``tenants``/``admission``/``fair``
 #: sections from the tenancy frontend, DESIGN.md §10).
-SCHEMA_VERSION = 6
+#: v7: closed-loop per-kind histograms switch to the shared bounded
+#: log-bucket implementation (``repro.obs.metrics``): same bucket edges
+#: and JSON shape, count/mean/p100 still exact, but p50/p99 are now
+#: bucket-interpolated (within one bucket of the exact sample quantile)
+#: instead of exact-sample percentiles; open-loop reports gain an ``obs``
+#: section (windowed timeline + stall attribution + trace block) when
+#: driven with ``--trace``/``--metrics-window`` (DESIGN.md §11).
+SCHEMA_VERSION = 7
 
 
 class LatencyHistogram:
-    """Log-spaced latency histogram with exact sample percentiles.
+    """Bounded log-bucket latency histogram (per-kind driver reports).
 
-    Buckets span 1 ns .. ~1000 s at 4 buckets/decade (JSON-friendly for
-    artifacts); out-of-range samples are clamped into the edge buckets
-    (zero-cost ops — e.g. buffered sim-tier inserts — land in the first
-    bucket) so ``sum(bucket_counts) == count`` always holds; percentiles
-    are computed from the retained raw samples, so p50/p99/p100 are
-    exact, not bucket-resolution estimates.
+    A thin façade over the shared :class:`repro.obs.metrics.
+    LogBucketHistogram`: 4 buckets/decade across 1 ns .. ~1000 s,
+    out-of-range samples clamped into the edge buckets (zero-cost ops —
+    e.g. buffered sim-tier inserts — land in the first bucket) so
+    ``sum(bucket_counts) == count`` always holds.  Memory is O(buckets),
+    not O(samples): count, mean, and p100 stay exact, while p50/p99 are
+    interpolated within the owning bucket (within one bucket width of the
+    exact sample quantile — property-tested in ``tests/test_obs.py``).
     """
 
-    EDGES = np.logspace(-9, 3, 49)          # seconds
+    EDGES = BUCKET_EDGES_S                  # seconds
 
     def __init__(self):
-        self.samples: list = []
-
-    def add(self, latencies_s) -> None:
-        lat = np.asarray(latencies_s, np.float64)
-        if lat.size:
-            self.samples.append(lat)
+        self._h = LogBucketHistogram()
 
     @property
-    def _all(self) -> np.ndarray:
-        return (np.concatenate(self.samples) if self.samples
-                else np.empty(0, np.float64))
+    def count(self) -> int:
+        return self._h.count
+
+    def add(self, latencies_s) -> None:
+        self._h.add_many(np.asarray(latencies_s, np.float64))
 
     def percentile(self, q: float) -> float:
-        a = self._all
-        return float(np.percentile(a, q)) if a.size else 0.0
+        """Quantile at ``q`` in [0, 100]; exact at q=0 and q=100."""
+        return self._h.quantile(q / 100.0)
 
     def to_dict(self) -> dict:
-        a = self._all
-        counts = (np.histogram(np.clip(a, self.EDGES[0], self.EDGES[-1]),
-                               self.EDGES)[0] if a.size
-                  else np.zeros(len(self.EDGES) - 1, int))
-        return {
-            "count": int(a.size),
-            "mean_s": float(a.mean()) if a.size else 0.0,
-            "p50_s": self.percentile(50),
-            "p99_s": self.percentile(99),
-            "p100_s": self.percentile(100),
-            "bucket_edges_s": [float(e) for e in self.EDGES],
-            "bucket_counts": [int(c) for c in counts],
-        }
+        s = self._h.summary()
+        del s["p999_s"]         # per-kind blocks predate the p99.9 field
+        return s
 
 
 def run_workload(engine: StorageEngine, workload: Workload, *,
@@ -142,7 +139,7 @@ def run_workload(engine: StorageEngine, workload: Workload, *,
         "max_pending_debt": int(max_debt),
         "pending_debt_before_drain": int(debt_before_drain),
         "per_kind": {OpKind(k).name.lower(): h.to_dict()
-                     for k, h in hists.items() if h.samples},
+                     for k, h in hists.items() if h.count},
         "stats": dataclasses.asdict(stats),
     }
 
@@ -151,14 +148,17 @@ def run_open_workload(engine: StorageEngine, workload: Workload, *,
                       arrival: str, rate: float,
                       duration_s: float | None = None,
                       maintain_budget: int = 1,
-                      frontend_config=None) -> dict:
+                      frontend_config=None,
+                      obs: ObsConfig | None = None) -> dict:
     """Open-loop counterpart of :func:`run_workload` (DESIGN.md §7).
 
     Timestamps ``workload``'s op stream with the named arrival process and
     serves it through the ingest frontend; the report mirrors the
     closed-loop shape with the SLO section under ``"open_loop"``.
     ``maintain_budget`` (the per-commit deamortization knob) shapes the
-    default frontend config; an explicit ``frontend_config`` wins wholesale.
+    default frontend config; an explicit ``frontend_config`` wins
+    wholesale.  ``obs`` (DESIGN.md §11) adds a windowed-metrics timeline,
+    stall attribution, and a structured span trace under ``report["obs"]``.
     """
     from repro.ingest import (FrontendConfig, make_arrivals, make_trace,
                               run_open_loop)
@@ -167,7 +167,7 @@ def run_open_workload(engine: StorageEngine, workload: Workload, *,
         frontend_config = FrontendConfig(maintain_budget=maintain_budget)
     process = make_arrivals(arrival, rate)
     trace = make_trace(workload, process, duration_s=duration_s)
-    report = run_open_loop(engine, trace, config=frontend_config)
+    report = run_open_loop(engine, trace, config=frontend_config, obs=obs)
     report["schema_version"] = SCHEMA_VERSION
     report["workload"] = dataclasses.asdict(workload.spec) | {
         "mix": {OpKind(k).name.lower(): p
@@ -225,7 +225,7 @@ def run_multi_workload(engine: StorageEngine, workloads: list, *,
             "interval": [int(lo), int(hi)],
             "live_pairs": int(engine.count_live_range(lo, hi)),
             "per_kind": {OpKind(k).name.lower(): h.to_dict()
-                         for k, h in hists[i].items() if h.samples},
+                         for k, h in hists[i].items() if h.count},
         })
     return {
         "schema_version": SCHEMA_VERSION,
@@ -244,7 +244,8 @@ def run_open_multi_workload(engine: StorageEngine, workloads: list, *,
                             arrival: str, rate: float,
                             duration_s: float | None = None,
                             maintain_budget: int = 1, weights=None,
-                            fair: bool = True) -> dict:
+                            fair: bool = True,
+                            obs: ObsConfig | None = None) -> dict:
     """Open-loop multi-stream drive through the multi-tenant frontend.
 
     One tenant per workload; every tenant gets its own instance of the
@@ -262,7 +263,8 @@ def run_open_multi_workload(engine: StorageEngine, workloads: list, *,
                             duration_s=duration_s)
               for i, wl in enumerate(workloads)}
     cfg = FrontendConfig(maintain_budget=maintain_budget)
-    report = run_multi_tenant(engine, tenants, traces, config=cfg, fair=fair)
+    report = run_multi_tenant(engine, tenants, traces, config=cfg, fair=fair,
+                              obs=obs)
     report["schema_version"] = SCHEMA_VERSION
     report["workloads"] = [
         dataclasses.asdict(wl.spec) | {
@@ -339,6 +341,15 @@ def main(argv=None) -> None:
     ap.add_argument("--duration", type=float, default=None,
                     help="open-loop trace window in seconds (default: the "
                          "full --ops stream)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="open-loop mode: save a Chrome trace_event JSON "
+                         "of frontend spans here (load in Perfetto / "
+                         "chrome://tracing; DESIGN.md §11)")
+    ap.add_argument("--metrics-window", type=float, default=None,
+                    metavar="SECONDS",
+                    help="open-loop mode: windowed-metrics timeline width "
+                         "in sim seconds (enables the report's 'obs' "
+                         "section; implied 1.0 when --trace is set)")
     ap.add_argument("--out", default="runs/driver_report.json",
                     help="write the JSON report here")
     args = ap.parse_args(argv)
@@ -358,6 +369,16 @@ def main(argv=None) -> None:
     mixes = args.mix or ["ycsb-a"]
     if args.weights is not None and len(args.weights) != len(mixes):
         ap.error("--weights needs exactly one value per --mix")
+    obs = None
+    if args.trace or args.metrics_window is not None:
+        if not args.arrival:
+            ap.error("--trace/--metrics-window need open-loop mode "
+                     "(--arrival)")
+        if len(names) > 1 and args.trace:
+            ap.error("--trace needs a single --engines value (one trace "
+                     "file per run)")
+        obs = ObsConfig(window_s=args.metrics_window or 1.0,
+                        trace_path=args.trace)
     overrides = dict(n_ops=args.ops, batch_size=args.batch,
                      preload=args.preload, key_space=args.key_space,
                      seed=args.seed)
@@ -383,7 +404,7 @@ def main(argv=None) -> None:
                     engine, workloads, arrival=args.arrival, rate=args.rate,
                     duration_s=args.duration,
                     maintain_budget=args.maintain_budget,
-                    weights=args.weights, fair=not args.unfair)
+                    weights=args.weights, fair=not args.unfair, obs=obs)
                 reports.append(report)
                 ol = report["open_loop"]
                 print(f"{engine.name:>14} ({report['stats']['clock']}) "
@@ -418,7 +439,8 @@ def main(argv=None) -> None:
             report = run_open_workload(engine, workload,
                                        arrival=args.arrival, rate=args.rate,
                                        duration_s=args.duration,
-                                       maintain_budget=args.maintain_budget)
+                                       maintain_budget=args.maintain_budget,
+                                       obs=obs)
             reports.append(report)
             ol = report["open_loop"]
             ins = ol["per_kind_e2e"].get("insert", {})
@@ -429,6 +451,13 @@ def main(argv=None) -> None:
                   f"e2e insert p50={ins.get('p50_s', 0)*1e3:.3f}ms "
                   f"p99.9={ins.get('p999_s', 0)*1e3:.3f}ms "
                   f"debt_max={ol['stalls']['debt_max']}")
+            if obs is not None and "obs" in ol:
+                ob = ol["obs"]
+                print(f"    obs: {ob['n_windows']} windows "
+                      f"stall_free={ob['stall_free_pct']:.1f}% "
+                      f"fluctuation={ob['fluctuation_score']:.3f} "
+                      f"trace_events={ob['trace']['events']}"
+                      + (f" -> {args.trace}" if args.trace else ""))
             continue
         report = run_workload(engine, workload,
                               maintain_budget=args.maintain_budget)

@@ -11,9 +11,9 @@ import os
 import time
 
 from . import (bench_engine, bench_ingest_device, bench_kernels, fig4_fanout,
-               fig5_dtree_size, fig67_insertion, fig89_query, fig_mixed,
-               fig_range, fig_recovery, fig_saturation, fig_scaling,
-               fig_stability, fig_tenancy, table2_theory)
+               fig5_dtree_size, fig67_insertion, fig89_query, fig_failover,
+               fig_mixed, fig_range, fig_recovery, fig_saturation,
+               fig_scaling, fig_stability, fig_tenancy, table2_theory)
 
 SUITES = [
     ("fig4_fanout (Fig 4a/4b)", fig4_fanout),
@@ -25,6 +25,7 @@ SUITES = [
     ("fig_scaling (sharded scale-out)", fig_scaling),
     ("fig_saturation (open-loop tail latency)", fig_saturation),
     ("fig_recovery (durability / crash recovery)", fig_recovery),
+    ("fig_failover (replicated kill-primary)", fig_failover),
     ("fig_stability (long-horizon windowed stability)", fig_stability),
     ("fig_tenancy (multi-tenant isolation)", fig_tenancy),
     ("table2_theory (Table 2)", table2_theory),
@@ -61,6 +62,8 @@ def main() -> None:
             kwargs = fig_saturation.QUICK_KWARGS
         elif args.quick and mod is fig_recovery:
             kwargs = fig_recovery.QUICK_KWARGS
+        elif args.quick and mod is fig_failover:
+            kwargs = fig_failover.QUICK_KWARGS
         elif args.quick and mod is fig_stability:
             kwargs = fig_stability.QUICK_KWARGS
         elif args.quick and mod is fig_tenancy:

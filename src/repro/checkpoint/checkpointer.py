@@ -46,6 +46,7 @@ import os
 import shutil
 import threading
 import time as _time
+import zlib
 
 import numpy as np
 
@@ -107,6 +108,10 @@ class Checkpointer:
         self.leaf_names: list[str] = []
         self._leaf_idx: dict[str, int] = {}     # O(1) path -> index
         self.known_steps: set[int] = set()      # steps the manifest proves
+        #: per-step payload checksums: {step: {leaf_path: crc32}} — WAL
+        #: records always had CRCs; these give checkpoint payload files the
+        #: same bit-rot detection (verified on restore, audited by scrub()).
+        self._crcs: dict[int, dict[str, int]] = {}
         self._thread: threading.Thread | None = None
         self._load_manifest()
         self._cleanup_tmp()
@@ -157,12 +162,16 @@ class Checkpointer:
         tmp = os.path.join(self.dir, f".tmp_step_{step}")
         final = os.path.join(self.dir, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
+        crcs = {}
         for path, arr in host.items():
             fp = os.path.join(tmp, path + ".npy")
             np.save(fp, arr)
             _fsync_file(fp)
+            with open(fp, "rb") as f:
+                crcs[path] = zlib.crc32(f.read())
         _fsync_dir(tmp)
         _reach(self.injector, CrashPoint.MID_CHECKPOINT)
+        self._crcs[step] = crcs
         self._write_manifest_files(step, mkeys, mvals, names)
         _reach(self.injector, CrashPoint.BEFORE_CHECKPOINT_RENAME)
         if os.path.exists(final):
@@ -211,6 +220,7 @@ class Checkpointer:
             fp = os.path.join(d, path + ".npy")
             if not os.path.exists(fp):
                 raise CheckpointError(f"leaf file missing: {fp}")
+            self._verify_leaf(step, path, fp)
             arr = np.load(fp)
             if arr.shape != tuple(leaf.shape):
                 raise CheckpointError(
@@ -237,6 +247,54 @@ class Checkpointer:
 
         return rebuild(like, shardings)
 
+    # ------------------------------------------------------------ integrity
+    def _verify_leaf(self, step: int, path: str, fp: str) -> None:
+        """Check ``fp`` against the manifest's recorded CRC32.
+
+        Raises :class:`CheckpointError` naming the offending file on a
+        mismatch.  Steps saved before checksums existed have no recorded
+        CRC and pass unverified.
+        """
+        recorded = self._crcs.get(step, {}).get(path)
+        if recorded is None:
+            return
+        with open(fp, "rb") as f:
+            actual = zlib.crc32(f.read())
+        if actual != recorded:
+            raise CheckpointError(
+                f"checksum mismatch in {fp} @ step {step}: "
+                f"recorded {recorded:#010x}, found {actual:#010x}")
+
+    def scrub(self) -> dict:
+        """Verify every payload file of every provable step.
+
+        Returns a JSON-ready audit: per step, the files checked and the
+        list of corrupt/missing ones (empty = clean).  Never raises — a
+        scrub is an audit, not a restore; callers decide what to do with
+        a dirty step (typically: rely on restore's fallback to the
+        previous provable step).
+        """
+        self.wait()
+        out = {"steps": {}, "clean": True}
+        for step in sorted(self.known_steps):
+            d = os.path.join(self.dir, f"step_{step}")
+            if not os.path.isdir(d):
+                continue
+            bad, checked = [], 0
+            for path in self._step_leaves(step):
+                fp = os.path.join(d, path + ".npy")
+                checked += 1
+                try:
+                    if not os.path.exists(fp):
+                        raise CheckpointError(f"leaf file missing: {fp}")
+                    self._verify_leaf(step, path, fp)
+                except CheckpointError as e:
+                    bad.append(str(e))
+            out["steps"][str(step)] = {"files": checked, "bad": bad}
+            if bad:
+                out["clean"] = False
+        return out
+
     # ------------------------------------------------------------- manifest
     def _manifest_arrays(self):
         keys, vals = [], []
@@ -259,7 +317,9 @@ class Checkpointer:
         _fsync_file(npz + ".tmp.npz")
         os.replace(npz + ".tmp.npz", npz)
         with open(jsn + ".tmp", "w") as f:
-            json.dump({"leaf_names": names, "last_step": step}, f)
+            json.dump({"leaf_names": names, "last_step": step,
+                       "crc": {str(s): m
+                               for s, m in sorted(self._crcs.items())}}, f)
             f.flush()
             os.fsync(f.fileno())
         os.replace(jsn + ".tmp", jsn)
@@ -273,6 +333,10 @@ class Checkpointer:
         meta = json.load(open(j))
         self.leaf_names = list(meta["leaf_names"])
         self._leaf_idx = {p: i for i, p in enumerate(self.leaf_names)}
+        # pre-CRC manifests simply have no "crc" block: their files load
+        # unverified (legacy), new saves start recording checksums.
+        self._crcs = {int(s): {p: int(c) for p, c in m.items()}
+                      for s, m in meta.get("crc", {}).items()}
         data = np.load(z)
         for k, v in zip(data["keys"], data["vals"]):
             self.manifest.insert(k, v)
@@ -331,11 +395,7 @@ class EngineCheckpointer(Checkpointer):
             raise CheckpointError("snapshot keys/vals must be parallel")
         self.save(int(lsn), {"keys": keys, "vals": vals}, blocking=blocking)
 
-    def load_latest_snapshot(self):
-        """``(lsn, keys, vals)`` of the newest provable snapshot, or None."""
-        lsn = self.latest_step()
-        if lsn is None:
-            return None
+    def _load_snapshot(self, lsn: int):
         d = os.path.join(self.dir, f"step_{lsn}")
         out = []
         for name in ("keys", "vals"):
@@ -346,6 +406,7 @@ class EngineCheckpointer(Checkpointer):
             fp = os.path.join(d, name + ".npy")
             if not os.path.exists(fp):
                 raise CheckpointError(f"snapshot leaf missing: {fp}")
+            self._verify_leaf(lsn, name, fp)
             out.append(np.load(fp))
         keys, vals = out
         if keys.shape != vals.shape:
@@ -353,3 +414,30 @@ class EngineCheckpointer(Checkpointer):
                 f"snapshot @ lsn {lsn} has mismatched leaves: "
                 f"{keys.shape} vs {vals.shape}")
         return int(lsn), keys, vals
+
+    def load_latest_snapshot(self):
+        """``(lsn, keys, vals)`` of the newest *valid* snapshot, or None.
+
+        A snapshot that fails validation (bit-rot caught by the CRC, a
+        missing leaf) is skipped and the previous provable step is tried —
+        replaying a longer WAL tail from an older good snapshot beats
+        trusting a corrupt newer one.  Raises the newest step's
+        :class:`CheckpointError` only when corruption left *no* loadable
+        snapshot at all (silently returning None there would amputate the
+        pre-corruption history the caller believes is checkpointed).
+        """
+        self.wait()
+        steps = sorted((s for s in self.known_steps
+                        if os.path.isdir(os.path.join(self.dir,
+                                                      f"step_{s}"))),
+                       reverse=True)
+        if not steps:
+            return None
+        first_err: CheckpointError | None = None
+        for lsn in steps:
+            try:
+                return self._load_snapshot(lsn)
+            except CheckpointError as e:
+                if first_err is None:
+                    first_err = e
+        raise first_err

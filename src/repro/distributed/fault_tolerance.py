@@ -3,8 +3,11 @@
 At 1000+ nodes, machine failure is a *when*, not an *if*; the framework's
 posture (exercised at toy scale on CPU, same code paths):
 
-  * ``HeartbeatMonitor`` — hosts report per-step heartbeats; a host silent
-    for ``timeout_steps`` is declared dead -> triggers elastic resize.
+  * ``HeartbeatMonitor`` — hosts report heartbeats on any monotone clock
+    (integer SPMD steps *or* float sim-seconds — the replication layer's
+    failure detector drives it straight off the ingest sim clock); a host
+    silent for ``timeout`` clock units is declared dead -> triggers
+    elastic resize / replica promotion.
   * ``StragglerDetector`` — per-host step-time EWMA; hosts slower than
     ``z_threshold`` sigma above fleet mean are flagged for exclusion
     (mitigates the straggler tail that stalls synchronous SPMD steps).
@@ -31,39 +34,55 @@ class HeartbeatMonitor:
     declared dead has already been resized away, and silently readmitting
     it would split the cluster's view; re-admission is the explicit
     :meth:`revive` path (post-restart health check).
+
+    The clock is any monotone number: integer SPMD steps (the trainer) or
+    float sim-seconds (the replication layer beats on the ingest sim
+    clock).  Host ids are any hashable (ints for trainer hosts, strings
+    like ``"g0/n1"`` for replica nodes).  ``timeout_steps`` is accepted as
+    an alias of ``timeout`` for the original trainer call sites.
     """
 
-    def __init__(self, hosts: list[int], timeout_steps: int = 3):
-        self.last_beat = {h: 0 for h in hosts}
-        self.timeout = timeout_steps
-        self.step = 0
-        self.dead: set[int] = set()
+    def __init__(self, hosts=(), timeout: float = 3,
+                 timeout_steps: float | None = None):
+        self.last_beat = {h: 0.0 for h in hosts}
+        self.timeout = timeout if timeout_steps is None else timeout_steps
+        self.step = 0.0
+        self.dead: set = set()
 
-    def beat(self, host: int, step: int) -> bool:
+    def add_host(self, host, now: float | None = None) -> None:
+        """Start monitoring ``host``; its beat clock starts at ``now``."""
+        self.last_beat[host] = self.step if now is None else float(now)
+
+    def beat(self, host, now: float) -> bool:
         """Record a heartbeat; returns False (ignored) for declared-dead
         hosts — late beats do not resurrect, only :meth:`revive` does."""
         if host in self.dead:
             return False
-        self.last_beat[host] = step
+        self.last_beat[host] = float(now)
         return True
 
-    def advance(self, step: int) -> list[int]:
-        """Returns hosts *newly* declared dead at this step."""
-        self.step = step
+    def advance(self, now: float) -> list:
+        """Returns hosts *newly* declared dead at clock value ``now``."""
+        self.step = now
         newly = [h for h, s in self.last_beat.items()
-                 if h not in self.dead and step - s >= self.timeout]
+                 if h not in self.dead and now - s >= self.timeout]
         self.dead.update(newly)
         return newly
 
-    def revive(self, host: int, step: int | None = None) -> None:
+    def forget(self, host) -> None:
+        """Stop monitoring ``host`` entirely (retired, not merely dead)."""
+        self.last_beat.pop(host, None)
+        self.dead.discard(host)
+
+    def revive(self, host, now: float | None = None) -> None:
         """Explicitly re-admit a declared-dead (or new) host.
 
-        The beat clock restarts at ``step`` (default: the monitor's current
-        step), so the host gets a full timeout window before it can be
+        The beat clock restarts at ``now`` (default: the monitor's current
+        clock), so the host gets a full timeout window before it can be
         re-declared.
         """
         self.dead.discard(host)
-        self.last_beat[host] = self.step if step is None else step
+        self.last_beat[host] = self.step if now is None else float(now)
 
 
 class StragglerDetector:
@@ -76,8 +95,8 @@ class StragglerDetector:
         self.alpha, self.z, self.warmup = alpha, z_threshold, warmup
         self.samples = 0
 
-    def record(self, host: int, step_seconds: float) -> None:
-        prev = self.ewma[host]
+    def record(self, host, step_seconds: float) -> None:
+        prev = self.ewma.get(host)
         self.ewma[host] = (step_seconds if prev is None
                            else self.alpha * step_seconds + (1 - self.alpha) * prev)
         self.samples += 1

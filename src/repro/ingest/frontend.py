@@ -66,7 +66,9 @@ from repro.core.engine_api import OpBatch, OpKind, StorageEngine
 from repro.obs.metrics import ObsConfig, WindowedMetrics
 from repro.obs.stall import attribute_stalls, detect_stalls
 from repro.obs.trace import Tracer
-from repro.wal.faults import CrashPoint, FaultInjector, reach as _reach
+from repro.wal.faults import (ChaosEvent, ChaosKind, CrashPoint,
+                              FaultInjector, FaultSchedule, SimulatedCrash,
+                              flip_wal_byte, reach as _reach, tear_wal_tail)
 
 from .arrivals import ArrivalTrace
 from .slo import STALL_FACTOR, SLOTracker
@@ -127,11 +129,21 @@ class IngestFrontend:
     def __init__(self, engine: StorageEngine, config: FrontendConfig | None = None,
                  durability: DurabilityConfig | None = None,
                  injector: FaultInjector | None = None,
-                 obs: ObsConfig | None = None):
+                 obs: ObsConfig | None = None,
+                 chaos: FaultSchedule | None = None):
         self.engine = engine
         self.config = config or FrontendConfig()
         self.durability = durability
         self._injector = injector
+        # chaos harness (DESIGN.md §12): the single-engine frontend owns the
+        # schedule's default target, ``"wal"``.  When ``chaos`` is None every
+        # hook below is one attribute check — the serving loop is unchanged.
+        self.chaos = chaos
+        self._chaos_stall_s = 0.0       # one-shot: next commit's fsync pays it
+        self._chaos_spike = 1.0         # service multiplier while spike active
+        self._chaos_spike_until = 0.0
+        if chaos is not None:
+            chaos.register("wal", self._on_chaos)
         # observability is strictly opt-in: when ``obs`` is None (or
         # disabled) every hook below is a single attribute check, so the
         # serving loop's timings are identical to the pre-obs frontend.
@@ -154,8 +166,9 @@ class IngestFrontend:
             from repro.checkpoint.checkpointer import EngineCheckpointer
             from repro.wal import (CHECKPOINT_SUBDIR, WAL_SUBDIR,
                                    WriteAheadLog)
+            self._wal_dir = os.path.join(durability.directory, WAL_SUBDIR)
             self._wal = WriteAheadLog(
-                os.path.join(durability.directory, WAL_SUBDIR),
+                self._wal_dir,
                 segment_bytes=durability.segment_bytes, injector=injector)
             self._ckpt = EngineCheckpointer(
                 os.path.join(durability.directory, CHECKPOINT_SUBDIR),
@@ -175,6 +188,30 @@ class IngestFrontend:
             self._ckpt_lsn = 0
             self._ckpts_taken = 0
             self._last_snapshot_pairs = 0
+
+    # ------------------------------------------------------------------ chaos
+    def _on_chaos(self, ev: ChaosEvent) -> None:
+        """Apply one due chaos event to this frontend (target ``"wal"``).
+
+        Performance faults mutate charging state consumed at the next
+        commit; ``CRASH`` propagates like an injector kill (the crash-
+        recovery tests' ``except SimulatedCrash`` path); the corruption
+        kinds physically damage the newest WAL segment so the *next
+        recovery* — not this run — sees a torn/corrupt tail.
+        """
+        if ev.kind is ChaosKind.FSYNC_STALL:
+            self._chaos_stall_s += ev.arg
+        elif ev.kind is ChaosKind.LATENCY_SPIKE:
+            self._chaos_spike = max(float(ev.arg), 1.0)
+            self._chaos_spike_until = ev.t + ev.dur_s
+        elif ev.kind is ChaosKind.CRASH:
+            # fires at a commit boundary, before the next WAL append: none
+            # of the still-queued ops were acked, exactly BEFORE_WAL_APPEND.
+            raise SimulatedCrash(CrashPoint.BEFORE_WAL_APPEND, 1)
+        elif ev.kind is ChaosKind.TORN_SEGMENT and self._wal is not None:
+            tear_wal_tail(self._wal_dir)
+        elif ev.kind is ChaosKind.BIT_FLIP and self._wal is not None:
+            flip_wal_byte(self._wal_dir)
 
     # ------------------------------------------------------------- durability
     def _wal_commit(self, batch: OpBatch) -> float:
@@ -346,12 +383,25 @@ class IngestFrontend:
             batch = OpBatch(kinds[idx], trace.ops.keys[idx],
                             trace.ops.vals[idx], trace.ops.his[idx])
 
+            # ---- chaos: due events fire at the commit boundary ------------
+            if self.chaos is not None:
+                for ev in self.chaos.fire_due(t_commit):
+                    if obs is not None:
+                        tracer.instant("chaos", ev.kind.value, t_commit,
+                                       target=ev.target, arg=ev.arg)
+
             # ---- durability: WAL append + fsync BEFORE apply --------------
             # (write-ahead rule; the fsync return is the ack instant, and
             # its cost is part of the commit's service time on this clock.)
             wal_s = 0.0
             if self._wal is not None:
                 wal_s = self._wal_commit(batch)
+            if self._chaos_stall_s > 0.0:
+                # a pending FSYNC_STALL charges the next commit exactly once
+                wal_s += self._chaos_stall_s
+                if self._wal is not None:
+                    self._wal_service_s += self._chaos_stall_s
+                self._chaos_stall_s = 0.0
 
             # ---- service (engine clock -> simulated clock) ----------------
             # apply cost is charged through per-op latencies (the engine's
@@ -364,6 +414,10 @@ class IngestFrontend:
                 op_service = np.asarray(res.latency_s, np.float64)
             else:
                 op_service = np.full(len(idx), cfg.virtual_op_service_s)
+            if self._chaos_spike > 1.0 and t_commit < self._chaos_spike_until:
+                # LATENCY_SPIKE window: every charged second costs ``arg``×
+                op_service = op_service * self._chaos_spike
+                wal_s *= self._chaos_spike
             service_s = wal_s + float(op_service.sum())
 
             # ---- interleaved maintenance + debt snapshot ------------------
@@ -447,20 +501,24 @@ class IngestFrontend:
                 "acked_commits": len(self.acked),
                 "last_acked_lsn": self.last_acked_lsn,
             }
+        if self.chaos is not None:
+            report["chaos"] = self.chaos.describe()
         return report
 
 
 def run_open_loop(engine: StorageEngine, trace: ArrivalTrace, *,
                   config: FrontendConfig | None = None,
                   durability: DurabilityConfig | None = None,
-                  obs: ObsConfig | None = None) -> dict:
+                  obs: ObsConfig | None = None,
+                  chaos: FaultSchedule | None = None) -> dict:
     """One-call harness: serve ``trace`` on ``engine``, full JSON report.
 
     The returned dict mirrors the closed-loop driver report shape (engine
     name, arrival description, final ``stats()`` snapshot) with the
     open-loop SLO section under ``"open_loop"``.
     """
-    fe = IngestFrontend(engine, config, durability=durability, obs=obs)
+    fe = IngestFrontend(engine, config, durability=durability, obs=obs,
+                        chaos=chaos)
     ol = fe.run(trace)
     stats = engine.stats()
     return {

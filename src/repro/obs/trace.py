@@ -36,6 +36,9 @@ SPAN_CATEGORIES = (
     "shed",            # admission-queue overflow drop (instant)
     "tenant_throttle", # DRR deferral of a backlogged tenant (instant)
     "dispatch",        # one host->device kernel dispatch (device tier)
+    "chaos",           # injected fault event (instant; repro.wal.faults)
+    "failover",        # primary death -> writes restored (replication)
+    "catchup",         # replica rebuild: snapshot ship + WAL tail replay
 )
 
 _CAT_INDEX = {c: i for i, c in enumerate(SPAN_CATEGORIES)}

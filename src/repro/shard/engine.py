@@ -43,6 +43,7 @@ import numpy as np
 from repro.core.engine_api import (EngineStats, OpBatch, OpKind, OpResult,
                                    StorageEngine, make_engine)
 from repro.core.sorted_run import KEY_DTYPE, VAL_DTYPE
+from repro.distributed.fault_tolerance import StragglerDetector
 
 from .partition import HashPartitioner, RangePartitioner
 from .scheduler import DebtScheduler
@@ -66,6 +67,7 @@ class ShardedEngine(StorageEngine):
         self.max_shards = max(int(max_shards), int(shards))
         self._base_kw = dict(base_kw)
         self._sched = DebtScheduler()
+        self._straggle: StragglerDetector | None = None
         self.partitioner = None
         self._engines: list[StorageEngine] = []
         self._debts: list[int] = []
@@ -102,6 +104,7 @@ class ShardedEngine(StorageEngine):
         self._debts = [0] * n
         self._approx_live = [0] * n
         self._inherited_s = [0.0] * n   # retired predecessors' charged time
+        self._straggle = StragglerDetector(list(range(n)), warmup=4)
         if self._tracer is not None:
             for e in self._engines:
                 e.attach_tracer(self._tracer)
@@ -200,13 +203,21 @@ class ShardedEngine(StorageEngine):
         if not self._engines:
             return 0
         budget = int(budget)
-        alloc = self._sched.allocate(self._debts, budget)
+        slow = self._straggle.stragglers() if self._straggle else ()
+        alloc = self._sched.allocate(self._debts, budget, stragglers=slow)
         if self._tracer is not None and sum(alloc) > 0:
             self._tracer.instant("cascade", "debt_alloc", self.io_time_s(),
-                                 debts=list(self._debts), alloc=list(alloc))
+                                 debts=list(self._debts), alloc=list(alloc),
+                                 stragglers=list(slow))
         for s, units in enumerate(alloc):
             if units:
+                before = self._engines[s].io_time_s()
                 self._debts[s] = self._engines[s].maintain(units)
+                # per-unit charged seconds feed the straggler EWMA: a shard
+                # whose units cost more time is nearer a forced drain at
+                # equal debt, so the scheduler front-loads it next step
+                self._straggle.record(
+                    s, (self._engines[s].io_time_s() - before) / units)
         if (sum(alloc) < budget and self.partitioner.can_split
                 and len(self._engines) < self.max_shards):
             self._maybe_split_hot()
@@ -286,6 +297,9 @@ class ShardedEngine(StorageEngine):
         self._inherited_s[sid:sid + 1] = [lineage_s, lineage_s]
         # the rewrite itself is deferred work the scheduler keeps paying off
         self._debts[sid:sid + 1] = [a.maintain(0), b.maintain(0)]
+        # shard indices shifted: per-index EWMA history is stale, restart it
+        self._straggle = StragglerDetector(list(range(len(self._engines))),
+                                           warmup=4)
         self.n_splits += 1
         return True
 

@@ -49,6 +49,15 @@ class RangePartitioner:
         qs = (np.arange(1, n_shards) * len(keys)) // n_shards
         return RangePartitioner(np.unique(keys[np.minimum(qs, len(keys) - 1)]))
 
+    @staticmethod
+    def even(n_shards: int, key_hi: int) -> "RangePartitioner":
+        """Evenly spaced pivots over ``[0, key_hi)`` — the distribution-free
+        bootstrap the replication layer uses when no preload sample exists
+        (replica groups need their key intervals before the first batch)."""
+        assert n_shards >= 1 and key_hi >= n_shards
+        return RangePartitioner(sorted({(i * key_hi) // n_shards
+                                        for i in range(1, n_shards)}))
+
     @property
     def n_shards(self) -> int:
         return len(self.pivots) + 1

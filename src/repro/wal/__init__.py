@@ -8,13 +8,16 @@ keyed by commit LSN bound the replay tail; :func:`~.recovery.recover`
 rebuilds an engine as snapshot + WAL-tail replay.  :mod:`.faults` is the
 crash-point injection harness the fault-injection test matrix kills with.
 """
-from .faults import CrashPoint, FaultInjector, SimulatedCrash
+from .faults import (ChaosEvent, ChaosKind, CrashPoint, FaultInjector,
+                     FaultSchedule, SimulatedCrash, flip_wal_byte,
+                     tear_wal_tail)
 from .log import WalRecord, WriteAheadLog
 from .recovery import (CHECKPOINT_SUBDIR, WAL_SUBDIR, RecoveryResult,
                        recover)
 
 __all__ = [
-    "CrashPoint", "FaultInjector", "SimulatedCrash",
+    "ChaosEvent", "ChaosKind", "CrashPoint", "FaultInjector",
+    "FaultSchedule", "SimulatedCrash", "flip_wal_byte", "tear_wal_tail",
     "WalRecord", "WriteAheadLog",
     "CHECKPOINT_SUBDIR", "WAL_SUBDIR", "RecoveryResult", "recover",
 ]

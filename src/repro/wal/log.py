@@ -215,18 +215,30 @@ class WriteAheadLog:
         elif self._fh is None:
             # reopened log: append to the recovered tail segment.
             self._fh = open(self._segments[-1].path, "ab")
-        if self._segments[-1].size and \
-                self._segments[-1].size + nbytes > self.segment_bytes:
+        tail = self._segments[-1]
+        if (tail.size and tail.size + nbytes > self.segment_bytes) or \
+                lsn != tail.last_lsn + 1:
+            # rotation on size, or on an LSN discontinuity: the chain check
+            # is per segment (anchored at the filename's first LSN), so a
+            # caller that must skip LSNs — a primary whose corrupted tail
+            # was rolled back but whose applied state is ahead, or a fresh
+            # replica starting at a snapshot LSN — gets a new segment whose
+            # name re-anchors the chain.
             self._open_segment(lsn)
         return self._fh, self._segments[-1]
 
-    def append_commit(self, kinds, keys, vals) -> tuple[int, int]:
+    def append_commit(self, kinds, keys, vals, *,
+                      lsn: int | None = None) -> tuple[int, int]:
         """Durably log one group commit; returns ``(lsn, bytes_written)``.
 
         Blocks until the record is fsynced — the caller's ack instant.
+        ``lsn`` overrides the self-assigned ``last_lsn + 1`` for logs that
+        mirror an external chain (replication ships the *group's* LSN to
+        every replica WAL); it must still advance monotonically.
         """
         t_span0 = _time.perf_counter()
-        lsn = self.last_lsn + 1
+        lsn = self.last_lsn + 1 if lsn is None else int(lsn)
+        assert lsn > self.last_lsn, "WAL LSNs must advance"
         payload = _encode_payload(kinds, keys, vals)
         rec = _HEADER.pack(_MAGIC, len(payload), lsn,
                            zlib.crc32(payload)) + payload

@@ -69,7 +69,12 @@ from .generator import MIXES, Workload, make_workload
 #: instead of exact-sample percentiles; open-loop reports gain an ``obs``
 #: section (windowed timeline + stall attribution + trace block) when
 #: driven with ``--trace``/``--metrics-window`` (DESIGN.md §11).
-SCHEMA_VERSION = 7
+#: v8: replicated open-loop reports (``--replicas``): top-level SLO report
+#: plus a ``replication`` section — ReplicationConfig, acked commit/row
+#: counts, failover event list (detection/promotion/RTO timestamps),
+#: per-group availability timelines, and the chaos schedule when
+#: ``--chaos`` is set (DESIGN.md §12).
+SCHEMA_VERSION = 8
 
 
 class LatencyHistogram:
@@ -149,7 +154,8 @@ def run_open_workload(engine: StorageEngine, workload: Workload, *,
                       duration_s: float | None = None,
                       maintain_budget: int = 1,
                       frontend_config=None,
-                      obs: ObsConfig | None = None) -> dict:
+                      obs: ObsConfig | None = None,
+                      chaos_spec: str | None = None) -> dict:
     """Open-loop counterpart of :func:`run_workload` (DESIGN.md §7).
 
     Timestamps ``workload``'s op stream with the named arrival process and
@@ -159,15 +165,20 @@ def run_open_workload(engine: StorageEngine, workload: Workload, *,
     default frontend config; an explicit ``frontend_config`` wins
     wholesale.  ``obs`` (DESIGN.md §11) adds a windowed-metrics timeline,
     stall attribution, and a structured span trace under ``report["obs"]``.
+    ``chaos_spec`` (DESIGN.md §12) schedules faults against the frontend
+    itself — the DSL's default target ``"wal"``.
     """
     from repro.ingest import (FrontendConfig, make_arrivals, make_trace,
                               run_open_loop)
+    from repro.wal import FaultSchedule
 
     if frontend_config is None:
         frontend_config = FrontendConfig(maintain_budget=maintain_budget)
     process = make_arrivals(arrival, rate)
     trace = make_trace(workload, process, duration_s=duration_s)
-    report = run_open_loop(engine, trace, config=frontend_config, obs=obs)
+    chaos = FaultSchedule.parse(chaos_spec) if chaos_spec else None
+    report = run_open_loop(engine, trace, config=frontend_config, obs=obs,
+                           chaos=chaos)
     report["schema_version"] = SCHEMA_VERSION
     report["workload"] = dataclasses.asdict(workload.spec) | {
         "mix": {OpKind(k).name.lower(): p
@@ -274,6 +285,58 @@ def run_open_multi_workload(engine: StorageEngine, workloads: list, *,
     return report
 
 
+def run_replicated_workload(engine_name: str, workload: Workload, *,
+                            arrival: str, rate: float,
+                            duration_s: float | None = None,
+                            groups: int = 4, replicas: int = 2,
+                            ack_mode: str = "quorum",
+                            chaos_spec: str | None = None,
+                            maintain_budget: int = 1,
+                            obs: ObsConfig | None = None,
+                            directory: str | None = None,
+                            base_kw: dict | None = None) -> dict:
+    """Replicated open loop (DESIGN.md §12): R WAL-shipped copies per range.
+
+    Serves the open-loop trace through :class:`repro.replication.
+    ReplicatedFrontend` — ``groups`` range partitions, each a primary plus
+    ``replicas - 1`` replicas acking at ``ack_mode`` ("quorum" or
+    "primary").  ``chaos_spec`` is the ``--chaos`` DSL
+    (``kind@t[:target[:arg[:dur]]]`` joined with ``;``, see
+    :meth:`repro.wal.FaultSchedule.parse`); the report gains a
+    ``"replication"`` section with failover events and per-group
+    availability timelines.  WAL segment directories live under
+    ``directory`` (a temp dir when None).
+    """
+    import tempfile
+
+    from repro.ingest import FrontendConfig, make_arrivals, make_trace
+    from repro.replication import ReplicationConfig, run_replicated
+    from repro.wal import FaultSchedule
+
+    def factory():
+        return make_engine(engine_name, **(base_kw or {}))
+
+    process = make_arrivals(arrival, rate)
+    trace = make_trace(workload, process, duration_s=duration_s)
+    chaos = FaultSchedule.parse(chaos_spec) if chaos_spec else None
+    rep = ReplicationConfig(replicas=replicas, ack_mode=ack_mode)
+    cfg = FrontendConfig(maintain_budget=maintain_budget)
+    if directory is None:
+        with tempfile.TemporaryDirectory(prefix="repro_repl_") as d:
+            report = run_replicated(factory, trace, d, groups=groups,
+                                    replication=rep, config=cfg,
+                                    chaos=chaos, obs=obs)
+    else:
+        report = run_replicated(factory, trace, directory, groups=groups,
+                                replication=rep, config=cfg,
+                                chaos=chaos, obs=obs)
+    report["schema_version"] = SCHEMA_VERSION
+    report["workload"] = dataclasses.asdict(workload.spec) | {
+        "mix": {OpKind(k).name.lower(): p
+                for k, p in workload.spec.mix.items()}}
+    return report
+
+
 # ---------------------------------------------------------------- CLI harness
 _SMALL_CONFIGS = {
     # tiny-footprint constructor kwargs for smoke runs (CI, demos).
@@ -335,6 +398,23 @@ def main(argv=None) -> None:
                     default=None,
                     help="open-loop mode: serve through the ingest frontend "
                          "with this arrival process (DESIGN.md §7)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="R",
+                    help="replicated open loop (DESIGN.md §12): R WAL-"
+                         "shipped copies per range partition (--shards sets "
+                         "the group count); needs --arrival")
+    ap.add_argument("--ack", choices=("quorum", "primary"), default="quorum",
+                    help="replicated ack mode: wait for a majority of "
+                         "copies (quorum, default) or the primary's fsync "
+                         "only (faster, loses acked tail on failover)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault-injection schedule for the open loop: "
+                         "';'-joined kind@t[:target[:arg[:dur]]] events, "
+                         "kinds crash|fsync_stall|latency_spike|"
+                         "torn_segment|bit_flip; with --replicas, targets "
+                         "like g0/primary, g1/r0, g2 (group-wide); without, "
+                         "the default target 'wal' hits the single-engine "
+                         "frontend; e.g. 'crash@0.05:"
+                         "g0/primary;latency_spike@0.1:g1:8:0.05'")
     ap.add_argument("--rate", type=float, default=10_000.0,
                     help="open-loop offered rate, ops/second (poisson/"
                          "diurnal mean; mmpp burst rate)")
@@ -369,6 +449,14 @@ def main(argv=None) -> None:
     mixes = args.mix or ["ycsb-a"]
     if args.weights is not None and len(args.weights) != len(mixes):
         ap.error("--weights needs exactly one value per --mix")
+    if args.chaos and not args.arrival:
+        ap.error("--chaos needs open-loop mode (--arrival; replicated "
+                 "targets additionally need --replicas R)")
+    if args.replicas:
+        if not args.arrival:
+            ap.error("--replicas needs open-loop mode (--arrival)")
+        if len(mixes) > 1:
+            ap.error("--replicas runs a single stream (one --mix)")
     obs = None
     if args.trace or args.metrics_window is not None:
         if not args.arrival:
@@ -435,12 +523,32 @@ def main(argv=None) -> None:
                           f"live={s['live_pairs']}")
             continue
         workload = make_workload(mixes[0], **overrides)
+        if args.replicas:
+            report = run_replicated_workload(
+                name, workload, arrival=args.arrival, rate=args.rate,
+                duration_s=args.duration, groups=max(1, args.shards),
+                replicas=args.replicas, ack_mode=args.ack,
+                chaos_spec=args.chaos,
+                maintain_budget=args.maintain_budget, obs=obs,
+                base_kw=base_kw)
+            reports.append(report)
+            rep = report["replication"]
+            ins = report["per_kind_e2e"].get("insert", {})
+            down = sum(a["downtime_s"] for a in rep["availability"])
+            print(f"{name:>14} R={args.replicas}/{args.ack} "
+                  f"x{rep['n_groups']} groups {mixes[0]}+{args.arrival}"
+                  f"@{args.rate:g}/s: done={report['n_done']} "
+                  f"shed={report['n_shed']} acked={rep['acked_commits']} "
+                  f"failovers={len(rep['failovers'])} "
+                  f"downtime={down*1e3:.1f}ms "
+                  f"insert p99.9={ins.get('p999_s', 0)*1e3:.3f}ms")
+            continue
         if args.arrival:
             report = run_open_workload(engine, workload,
                                        arrival=args.arrival, rate=args.rate,
                                        duration_s=args.duration,
                                        maintain_budget=args.maintain_budget,
-                                       obs=obs)
+                                       obs=obs, chaos_spec=args.chaos)
             reports.append(report)
             ol = report["open_loop"]
             ins = ol["per_kind_e2e"].get("insert", {})

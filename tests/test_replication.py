@@ -1,0 +1,362 @@
+"""Replication layer tests (DESIGN.md §12).
+
+Covers the WAL-shipping replica groups end to end: explicit-LSN appends
+and chain re-anchoring in the log, the chaos DSL and seeded random
+schedules, float-clock heartbeats, quorum vs primary ack modes, the full
+kill-primary failover path (promotion, WAL-tail replay, rebuild), the
+R=1 counterfactual, checkpoint CRC verification with provable-step
+fallback, the straggler-aware maintenance allocator, and the seeded
+chaos soak.
+
+The soak's differential invariant — the one the whole layer exists for:
+
+* **zero lost acked writes** — every row whose quorum fsync returned is
+  in the surviving ensemble after every failover the schedule caused;
+* **zero resurrected unacked writes** — nothing that was never acked
+  appears.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (CheckpointError, Checkpointer,
+                                           EngineCheckpointer)
+from repro.core.engine_api import OpKind, make_engine
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.ingest import FrontendConfig, PoissonArrivals, make_trace
+from repro.replication import (ReplicatedFrontend, ReplicaGroup,
+                               ReplicationConfig)
+from repro.shard.partition import RangePartitioner
+from repro.shard.scheduler import DebtScheduler
+from repro.wal import ChaosKind, FaultSchedule, WriteAheadLog
+from repro.workloads import make_workload
+
+ENGINE_KW = dict(f=3, sigma=256)
+FRONTEND = FrontendConfig(max_queue=4096, commit_ops=32, linger_s=2e-4)
+
+
+def _factory():
+    return make_engine("nbtree", **ENGINE_KW)
+
+
+def _trace(n_ops, seed=0, rate=40_000.0, mix="insert-heavy", preload=1024):
+    wl = make_workload(mix, key_space=1 << 20, n_ops=n_ops, preload=preload,
+                       batch_size=128, seed=seed)
+    return make_trace(wl, PoissonArrivals(rate))
+
+
+def _frontend(tmp_path, *, groups=3, replicas=2, chaos=None, **rep_kw):
+    rep = ReplicationConfig(replicas=replicas,
+                            heartbeat_timeout_s=rep_kw.pop(
+                                "heartbeat_timeout_s", 0.005), **rep_kw)
+    return ReplicatedFrontend(_factory, str(tmp_path), groups=groups,
+                              replication=rep, config=FRONTEND, chaos=chaos,
+                              window_s=0.01)
+
+
+def _differential(fe, trace):
+    """(lost_acked, resurrected, lost_range) vs the acked-prefix oracle."""
+    oracle = {int(k): int(v) for k, v in zip(trace.preload.keys,
+                                             trace.preload.vals)}
+    for _gid, _lsn, kinds, keys, vals in fe.acked:
+        for kk, k, v in zip(kinds.tolist(), keys.tolist(), vals.tolist()):
+            if kk == int(OpKind.INSERT):
+                oracle[int(k)] = int(v)
+            elif kk == int(OpKind.DELETE):
+                oracle.pop(int(k), None)
+    failed = {g.gid for g in fe.groups if g.failed}
+    live = {}
+    for g in fe.groups:
+        if g.gid not in failed:
+            lk, lv = g.primary.engine.dump_live()
+            live.update(zip(lk.tolist(), lv.tolist()))
+    okeys = np.fromiter(oracle.keys(), np.uint64, len(oracle))
+    gids = fe.partitioner.shard_of(okeys)
+    lost_range = sum(int(g) in failed for g in gids)
+    lost = sum(1 for k, g in zip(okeys.tolist(), gids)
+               if int(g) not in failed
+               and (int(k) not in live or live[int(k)] != oracle[int(k)]))
+    res = sum(1 for k in live if k not in oracle)
+    return lost, res, lost_range
+
+
+# ------------------------------------------------------------------ wal / dsl
+def test_wal_explicit_lsn_reanchors_chain(tmp_path):
+    wal = WriteAheadLog(str(tmp_path), segment_bytes=1 << 20)
+    kinds = np.full(4, int(OpKind.INSERT), np.int8)
+    keys = np.arange(4, dtype=np.uint64)
+    vals = keys.astype(np.int64)
+    assert wal.append_commit(kinds, keys, vals)[0] == 1
+    assert wal.append_commit(kinds, keys, vals, lsn=2)[0] == 2
+    # a gap (fresh replica starting at a snapshot LSN) forces rotation so
+    # each segment's internal chain stays contiguous
+    segs = wal.n_segments
+    assert wal.append_commit(kinds, keys, vals, lsn=10)[0] == 10
+    assert wal.n_segments == segs + 1
+    assert [r.lsn for r in wal.replay()] == [1, 2, 10]
+    with pytest.raises(AssertionError):
+        wal.append_commit(kinds, keys, vals, lsn=5)   # LSNs must advance
+    wal.close()
+
+
+def test_fault_schedule_parse_fire_and_describe():
+    fs = FaultSchedule.parse(
+        "crash@0.5:g0/primary;fsync_stall@0.1:g1/r0:0.02;"
+        "latency_spike@0.2:g0:8:0.5")
+    assert fs.pending == 3
+    seen = []
+    fs.register("g0/primary", lambda ev: seen.append(ev))
+    fs.register("g1/r0", lambda ev: seen.append(ev))
+    fired = fs.fire_due(0.25)          # spike has no handler -> unrouted
+    assert [e.kind for e in fired] == [ChaosKind.FSYNC_STALL,
+                                       ChaosKind.LATENCY_SPIKE]
+    assert len(seen) == 1 and seen[0].arg == pytest.approx(0.02)
+    assert len(fs.unrouted) == 1
+    assert fs.next_time == pytest.approx(0.5)
+    fs.fire_due(1.0)
+    assert fs.pending == 0 and fs.next_time is None
+    assert "crash" in str(fs.describe())
+
+
+def test_random_schedule_spaces_destructive_hits_per_group():
+    targets = [f"g{g}/{who}" for g in range(3)
+               for who in ("primary", "r0")] + [f"g{g}" for g in range(3)]
+    fs = FaultSchedule.random(40, seed=7, t_lo=0.0, t_hi=1.0,
+                              targets=targets, min_gap_s=0.25)
+    destructive = {ChaosKind.CRASH, ChaosKind.TORN_SEGMENT,
+                   ChaosKind.BIT_FLIP}
+    last = {}
+    for ev in fs.events:
+        if ev.kind in destructive:
+            g = ev.target.split("/")[0]
+            assert ev.t - last.get(g, -1e9) >= 0.25
+            last[g] = ev.t
+    # determinism: same seed, same schedule
+    fs2 = FaultSchedule.random(40, seed=7, t_lo=0.0, t_hi=1.0,
+                               targets=targets, min_gap_s=0.25)
+    assert fs.events == fs2.events
+
+
+def test_heartbeat_monitor_float_sim_time():
+    m = HeartbeatMonitor(["g0/n0", "g0/n1"], timeout=0.005)
+    m.beat("g0/n0", 0.0401)
+    m.beat("g0/n1", 0.0403)
+    assert m.advance(0.0442) == []
+    m.beat("g0/n1", 0.0445)
+    assert m.advance(0.0455) == ["g0/n0"]      # declared exactly once
+    m.beat("g0/n1", 0.089)
+    assert m.advance(0.09) == []               # no re-declaration of n0
+    assert not m.beat("g0/n0", 0.091)          # late beat can't resurrect
+    m.revive("g0/n0", 0.091)
+    m.beat("g0/n1", 0.093)
+    assert m.advance(0.095) == []
+    # original trainer call sites: integer steps via timeout_steps alias
+    t = HeartbeatMonitor([0, 1], timeout_steps=3)
+    t.beat(0, 2)
+    assert t.advance(4) == [1]
+
+
+def test_range_partitioner_even():
+    p = RangePartitioner.even(4, 1 << 20)
+    assert p.n_shards == 4
+    gids = p.shard_of(np.asarray([0, (1 << 18) + 5, (1 << 19) + 5,
+                                  (3 << 18) + 5, (1 << 20) - 1], np.uint64))
+    assert gids.tolist() == [0, 1, 2, 3, 3]
+
+
+# ------------------------------------------------------------- replica groups
+def test_group_commit_quorum_vs_primary_ack(tmp_path):
+    kinds = np.full(8, int(OpKind.INSERT), np.int8)
+    keys = np.arange(8, dtype=np.uint64)
+    vals = keys.astype(np.int64)
+    gq = ReplicaGroup(0, str(tmp_path / "q"), _factory,
+                      ReplicationConfig(replicas=3, ack_mode="quorum"),
+                      key_lo=0, key_hi=1 << 20)
+    lsn, s_quorum = gq.commit(kinds, keys, vals)
+    assert lsn == 1
+    # the record is durable on the primary and every in-sync replica
+    assert gq.primary.durable_lsn == 1
+    assert all(r.durable_lsn == 1 for r in gq.replicas())
+    gp = ReplicaGroup(0, str(tmp_path / "p"), _factory,
+                      ReplicationConfig(replicas=3, ack_mode="primary"),
+                      key_lo=0, key_hi=1 << 20)
+    _, s_primary = gp.commit(kinds, keys, vals)
+    # primary-only ack never waits on a replica leg
+    assert s_primary <= s_quorum
+
+
+def test_failover_promotes_most_caught_up_replica(tmp_path):
+    chaos = FaultSchedule.parse("crash@0.02:g1/primary")
+    fe = _frontend(tmp_path, chaos=chaos)
+    trace = _trace(2_500)
+    report = fe.run(trace)
+    rep = report["replication"]
+    assert rep["failed_groups"] == []
+    assert len(rep["failovers"]) == 1
+    ev = rep["failovers"][0]
+    assert ev["gid"] == 1 and ev["outcome"] == "promoted"
+    assert ev["t_detected"] >= 0.02 and ev["rto_s"] > 0
+    assert ev["new_primary"].startswith("g1/")
+    assert ev["replayed_ops"] >= 0
+    lost, res, lost_range = _differential(fe, trace)
+    assert (lost, res, lost_range) == (0, 0, 0)
+    # the affected group went down and came back; others never blinked
+    avail = {a["gid"]: a["downtime_s"] for a in rep["availability"]}
+    assert avail[1] > 0
+    assert avail[0] == 0 and avail[2] == 0
+
+
+def test_r1_kill_loses_the_range_permanently(tmp_path):
+    chaos = FaultSchedule.parse("crash@0.02:g1/primary")
+    fe = _frontend(tmp_path, replicas=1, chaos=chaos)
+    trace = _trace(2_500)
+    report = fe.run(trace)
+    rep = report["replication"]
+    assert rep["failed_groups"] == [1]
+    assert rep["lost_acked_rows_failed_groups"] > 0
+    assert report["n_shed"] > 0                # deadline-shed, not hung
+    lost, res, lost_range = _differential(fe, trace)
+    assert (lost, res) == (0, 0)               # survivors stay exact
+    assert lost_range > 0
+
+
+def test_clean_run_has_no_failovers(tmp_path):
+    fe = _frontend(tmp_path)
+    trace = _trace(1_500)
+    report = fe.run(trace)
+    rep = report["replication"]
+    assert rep["failovers"] == [] and rep["failed_groups"] == []
+    assert report["n_shed"] == 0
+    assert _differential(fe, trace) == (0, 0, 0)
+
+
+def test_chaos_soak_differential(tmp_path):
+    """10k-op seeded soak under a random schedule: the two invariants hold
+    across every failover the schedule causes."""
+    groups = 3
+    targets = ([f"g{g}/primary" for g in range(groups)]
+               + [f"g{g}/r0" for g in range(groups)]
+               + [f"g{g}" for g in range(groups)])
+    chaos = FaultSchedule.random(24, seed=99, t_lo=0.01, t_hi=0.22,
+                                 targets=targets, min_gap_s=0.30,
+                                 stall_s=0.002, spike=6.0,
+                                 spike_dur_s=0.02)
+    fe = _frontend(tmp_path, groups=groups, chaos=chaos)
+    trace = _trace(10_000, seed=3)
+    report = fe.run(trace)
+    rep = report["replication"]
+    assert rep["failed_groups"] == []
+    assert len(fe.chaos.unrouted) == 0
+    lost, res, lost_range = _differential(fe, trace)
+    assert (lost, res, lost_range) == (0, 0, 0)
+    assert rep["acked_commits"] > 0
+
+
+# ------------------------------------------------------------ checkpoint crc
+def test_checkpointer_crc_scrub_and_restore_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    ck.save(1, tree)
+    ck.save(2, {"w": np.arange(6, dtype=np.float32) * 2})
+    assert ck.scrub()["clean"]
+    fp = tmp_path / "step_2" / "w.npy"
+    raw = bytearray(fp.read_bytes())
+    raw[-1] ^= 0xFF
+    fp.write_bytes(bytes(raw))
+    rep = ck.scrub()
+    assert not rep["clean"]
+    assert rep["steps"]["2"]["bad"] and not rep["steps"]["1"]["bad"]
+    with pytest.raises(CheckpointError, match=r"checksum mismatch in .*w"):
+        ck.restore(2, tree)
+    ck.restore(1, tree)                        # older step still provable
+
+
+def test_engine_checkpointer_falls_back_past_corruption(tmp_path):
+    ck = EngineCheckpointer(str(tmp_path))
+    for lsn in (5, 9):
+        ck.save_snapshot(lsn, np.arange(lsn, dtype=np.uint64),
+                         np.arange(lsn, dtype=np.int64))
+    fp = tmp_path / "step_9" / "keys.npy"
+    raw = bytearray(fp.read_bytes())
+    raw[len(raw) // 2] ^= 0x42
+    fp.write_bytes(bytes(raw))
+    lsn, keys, _vals = ck.load_latest_snapshot()
+    assert lsn == 5 and len(keys) == 5         # provable step wins
+    fp5 = tmp_path / "step_5" / "keys.npy"
+    raw = bytearray(fp5.read_bytes())
+    raw[-1] ^= 0x01
+    fp5.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointError, match="checksum mismatch"):
+        ck.load_latest_snapshot()              # nothing provable left
+
+
+# ------------------------------------------------------- straggler scheduling
+def test_straggler_boost_drains_slow_shard():
+    def simulate(flag_straggler: bool) -> int:
+        """Peak outstanding debt of shard 1 over a steady arrival stream."""
+        sched = DebtScheduler(straggler_boost=2.0)
+        debts, peak = [0, 0], 0
+        for _ in range(60):
+            debts = [d + 2 for d in debts]
+            alloc = sched.allocate(debts, 3,
+                                   stragglers=(1,) if flag_straggler else ())
+            debts = [d - a for d, a in zip(debts, alloc)]
+            peak = max(peak, debts[1])
+        return peak
+
+    assert simulate(True) < simulate(False)
+
+    # flag or no flag, only owed units are granted, and with no straggler
+    # the policy is bit-identical to the unweighted allocator
+    a = DebtScheduler().allocate([5, 0, 3], 10, stragglers=(1,))
+    assert a == [5, 0, 3]
+    x = DebtScheduler().allocate([4, 4, 4], 7)
+    y = DebtScheduler().allocate([4, 4, 4], 7, stragglers=())
+    assert x == y
+
+
+def test_sharded_engine_records_straggler_samples():
+    from repro.core.engine_api import OpBatch
+
+    eng = make_engine("sharded:nbtree", shards=3, f=3, sigma=64)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        keys = rng.integers(0, 1 << 20, 256).astype(np.uint64)
+        eng.apply(OpBatch.inserts(keys, keys.astype(np.int64)))
+        eng.maintain(4)
+    assert eng._straggle is not None and eng._straggle.samples > 0
+    eng.drain()
+
+
+def test_single_engine_frontend_chaos_wal_target(tmp_path):
+    """The DSL's default target ``"wal"`` routes to the single-engine
+    frontend: a stall charges the next commit's fsync exactly once, a
+    spike scales charged service inside its window, and CRASH propagates
+    out of the loop like an injector kill."""
+    from repro.ingest import DurabilityConfig, IngestFrontend
+    from repro.wal.faults import SimulatedCrash
+
+    trace = _trace(1500, seed=5)
+    base = IngestFrontend(
+        _factory(), FRONTEND,
+        durability=DurabilityConfig(str(tmp_path / "base"))).run(trace)
+    sched = FaultSchedule.parse(
+        "fsync_stall@0.002::0.01;latency_spike@0.006::8:0.01")
+    fe = IngestFrontend(
+        _factory(), FRONTEND,
+        durability=DurabilityConfig(str(tmp_path / "chaos")), chaos=sched)
+    rep = fe.run(trace)
+    assert rep["chaos"]["pending"] == 0
+    assert len(rep["chaos"]["fired"]) == 2 and not rep["chaos"]["unrouted"]
+    # the stall alone adds 10ms of charged fsync; the spike multiplies on top
+    assert (rep["durability"]["wal"]["service_s_total"]
+            > base["durability"]["wal"]["service_s_total"] + 0.009)
+    assert rep["per_kind_e2e"]["insert"]["p100_s"] \
+        > base["per_kind_e2e"]["insert"]["p100_s"]
+
+    fe2 = IngestFrontend(
+        _factory(), FRONTEND,
+        durability=DurabilityConfig(str(tmp_path / "crash")),
+        chaos=FaultSchedule.parse("crash@0.004"))
+    with pytest.raises(SimulatedCrash):
+        fe2.run(trace)
+    assert fe2.acked  # some commits were acked before the kill
